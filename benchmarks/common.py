@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness."""
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

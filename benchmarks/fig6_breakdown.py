@@ -1,0 +1,14 @@
+"""Paper Fig. 6: per-stage execution-time breakdown of AlexNet."""
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+from .common import emit
+
+
+def run() -> None:
+    gate = CNN2Gate.from_graph(cnn.alexnet())
+    rep = gate.latency_report("ARRIA10", 16, 32)
+    for i, lt in enumerate(rep.layers):
+        bound = "mem" if lt.t_memory > lt.t_compute else "compute"
+        emit(f"fig6/layer{i + 1}_{lt.kind}", lt.time_s * 1e6,
+             f"{lt.name} {lt.time_s * 1e3:.3f}ms {bound}-bound "
+             f"macs={lt.macs / 1e6:.0f}M")

@@ -1,0 +1,49 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: numbers are
+functional-path timings, NOT TPU performance — TPU perf is projected by
+the roofline; this bench guards against pathological regressions and
+reports the kernels' arithmetic characteristics)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.qgemm import qgemm
+from repro.kernels.qconv import qconv2d
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from .common import emit, timeit
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> None:
+    # int8 GEMM: the conv/FC fused unit
+    m, k, n = 256, 512, 256
+    x = jnp.asarray(RNG.integers(-128, 128, (m, k), np.int8))
+    w = jnp.asarray(RNG.integers(-128, 128, (k, n), np.int8))
+    b = jnp.zeros((n,), jnp.int32)
+    us = timeit(lambda: qgemm(x, w, b, shift=8, interpret=True))
+    ops = 2 * m * k * n
+    emit("kernels/qgemm_256x512x256", us, f"{ops / 1e6:.0f}MOp int8")
+
+    # fused conv+relu+pool
+    xc = jnp.asarray(RNG.integers(-128, 128, (1, 32, 32, 16), np.int8))
+    wc = jnp.asarray(RNG.integers(-128, 128, (3, 3, 16, 32), np.int8))
+    us = timeit(lambda: qconv2d(xc, wc, None, strides=(1, 1), shift=8,
+                                relu=True, pool=(2, 2), interpret=True))
+    emit("kernels/qconv_32x32x16->32", us, "fused conv+relu+maxpool")
+
+    # flash attention
+    q = jnp.asarray(RNG.standard_normal((1, 4, 256, 64)), jnp.float32)
+    kv = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    us = timeit(lambda: flash_attention(q, kv, kv, causal=True,
+                                        block_q=64, block_k=64,
+                                        interpret=True))
+    emit("kernels/flash_attn_s256_gqa", us, "blocked online softmax")
+
+    # ssd scan
+    xs = jnp.asarray(RNG.standard_normal((1, 256, 4, 32)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (1, 256, 4)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.5, 2, (4,)), jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((1, 256, 1, 32)) * 0.3, jnp.float32)
+    us = timeit(lambda: ssd_scan(xs, dt, a, bb, bb, chunk=64,
+                                 interpret=True))
+    emit("kernels/ssd_scan_s256", us, "chunked state-space duality")

@@ -1,0 +1,25 @@
+"""§Perf hillclimb results (reads results/perf.json)."""
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "perf.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("perf/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.perf")
+        return
+    with open(RESULTS) as f:
+        cells = json.load(f)
+    for key in sorted(cells):
+        v = cells[key]
+        arch, shape, it = key.split("|")
+        emit(f"perf/{arch}/{shape}/{it}", v["t_step"] * 1e6,
+             f"rf={v['roofline_fraction']:.3f} dom={v['dominant']} "
+             f"tc={v['t_compute']:.3g} tm={v['t_memory_fused']:.3g} "
+             f"tcol={v['t_collective']:.3g} "
+             f"peakGB={v['peak_bytes_per_dev'] / 1e9:.1f}")

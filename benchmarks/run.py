@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+"""
+import argparse
+import sys
+import traceback
+
+from . import (fig6_breakdown, kernels_bench, perf_iterations,
+               roofline_table, table1_latency, table2_dse, table3_alexnet,
+               table4_vgg)
+
+SUITES = {
+    "table1": table1_latency,
+    "table2": table2_dse,
+    "table3": table3_alexnet,
+    "table4": table4_vgg,
+    "fig6": fig6_breakdown,
+    "kernels": kernels_bench,
+    "roofline": roofline_table,
+    "perf": perf_iterations,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            SUITES[name].run()
+        except Exception:  # noqa: BLE001 - report, continue, fail at end
+            traceback.print_exc()
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

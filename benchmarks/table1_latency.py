@@ -1,0 +1,50 @@
+"""Paper Table 1: execution times for AlexNet and VGG-16 (batch 1).
+
+Modeled FPGA latencies from the calibrated board model (DESIGN.md §8)
+for both boards x both networks, plus a measured CPU-emulation time —
+printed against the paper's published values with relative error.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+from .common import emit
+
+PAPER_MS = {
+    ("alexnet", "ARRIA10"): 18.24,
+    ("vgg16", "ARRIA10"): 205.0,
+    ("alexnet", "5CSEMA5"): 153.0,
+    ("vgg16", "5CSEMA5"): 4260.0,
+}
+OPTIONS = {"ARRIA10": (16, 32), "5CSEMA5": (8, 8)}
+
+
+def run() -> None:
+    gates = {"alexnet": CNN2Gate.from_graph(cnn.alexnet()),
+             "vgg16": CNN2Gate.from_graph(cnn.vgg16())}
+    for (net, board), paper in PAPER_MS.items():
+        rep = gates[net].latency_report(board, *OPTIONS[board])
+        ours = rep.total_s * 1e3
+        err = (ours - paper) / paper * 100
+        emit(f"table1/{net}/{board}", ours * 1e3,
+             f"model={ours:.1f}ms paper={paper}ms err={err:+.0f}% "
+             f"gops={rep.gops:.1f}")
+
+    # measured emulation-mode latency (the paper's Core-i7 column role:
+    # functional verification, not a throughput reference)
+    g = cnn.tiny_cnn()
+    gate = CNN2Gate.from_graph(g)
+    x = np.random.default_rng(0).standard_normal((1, 3, 32, 32)).astype(
+        np.float32)
+    gate.calibrate_quantization(x)
+    run_fn = gate.build("emulation")
+    xj = jnp.asarray(x)
+    run_fn(xj)  # warm
+    t0 = time.perf_counter()
+    np.asarray(run_fn(xj))
+    emu = time.perf_counter() - t0
+    emit("table1/emulation/tiny_cnn", emu * 1e6,
+         f"emulation verify pass {emu:.2f}s (paper: 13s AlexNet on i7)")

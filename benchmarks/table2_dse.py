@@ -1,0 +1,24 @@
+"""Paper Table 2: DSE details — BF vs RL time, options found, fit."""
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+from .common import emit
+
+EVAL_COST_S = 7.0  # one vendor-compiler estimate (30 evals ~ 3.5 min)
+PAPER = {"5CSEMA4": ("no fit", 2.5, 3.5), "5CSEMA5": ("(8, 8)", 2.5, 3.5),
+         "ARRIA10": ("(16, 32)", 3.0, 4.0)}
+
+
+def run() -> None:
+    gate = CNN2Gate.from_graph(cnn.alexnet())
+    for board, (paper_best, paper_rl, paper_bf) in PAPER.items():
+        bf = gate.explore(board, algo="bf", eval_cost_s=EVAL_COST_S)
+        rl = gate.explore(board, algo="rl", eval_cost_s=EVAL_COST_S)
+        best = str(rl.best) if rl.found else "no fit"
+        speedup = (1 - rl.wall_time_s / bf.wall_time_s) * 100
+        emit(f"table2/{board}/bf", bf.wall_time_s * 1e6,
+             f"best={bf.best} evals={bf.evaluations} "
+             f"t={bf.wall_time_s / 60:.2f}min (paper {paper_bf}min)")
+        emit(f"table2/{board}/rl", rl.wall_time_s * 1e6,
+             f"best={best} evals={rl.evaluations} "
+             f"t={rl.wall_time_s / 60:.2f}min (paper {paper_rl}min) "
+             f"rl_saves={speedup:.0f}% paper_best={paper_best}")

@@ -1,0 +1,22 @@
+"""Paper Table 4: VGG-16 comparison to existing works at (16, 32)."""
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+from .common import emit
+
+CITED = [
+    ("Qiu'16 [39]", "Zynq 7045", None, 136.91),
+    ("Ma'17 [10]", "Arria10", 47.97, 645.25),
+    ("fpgaConvNet [8]", "Zynq 7045", 249.5, 161.98),
+    ("Suda'16 [20]", "Stratix-V", 262.9, 117.8),
+]
+
+
+def run() -> None:
+    gate = CNN2Gate.from_graph(cnn.vgg16())
+    rep = gate.latency_report("ARRIA10", 16, 32)
+    for name, fpga, lat, gops in CITED:
+        emit(f"table4/{name.split()[0]}",
+             (lat or 0) * 1e3, f"{fpga} {gops}GOp/s")
+    emit("table4/this-work", rep.total_s * 1e6,
+         f"Arria10 {rep.total_s * 1e3:.0f}ms {rep.gops:.1f}GOp/s "
+         f"(paper: 205ms, 151.7GOp/s)")

@@ -1,0 +1,78 @@
+"""CNN2Gate quickstart: the paper's full pipeline on a small CNN.
+
+    PYTHONPATH=src python examples/quickstart.py [--model alexnet]
+
+Steps (Fig. 4a of the paper):
+  1. build/export a CNN in the ONNX-lite transport format,
+  2. front-end parse -> linked pipeline of fused stages,
+  3. apply post-training (N, m) quantization,
+  4. hardware-aware DSE against an FPGA profile,
+  5. emulation-mode build (CPU verify) + fullflow AOT build,
+  6. latency report from the calibrated board model.
+"""
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.synthesis import CNN2Gate
+from repro.core import onnx_lite
+from repro.models import cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="tiny",
+                    choices=["tiny", "alexnet", "vgg16"])
+    ap.add_argument("--board", default="ARRIA10")
+    args = ap.parse_args()
+
+    builder = {"tiny": cnn.tiny_cnn, "alexnet": cnn.alexnet,
+               "vgg16": cnn.vgg16}[args.model]
+    graph = builder(batch=1)
+    print(f"[1] built {graph.name}: {len(graph.nodes)} ONNX-style nodes")
+
+    # round-trip through the transport layer, as a real exporter would
+    model_dict = onnx_lite.to_model_dict(graph)
+    graph = onnx_lite.from_model_dict(model_dict, graph.initializers)
+
+    gate = CNN2Gate.from_graph(graph)
+    print("[2] parsed pipeline:")
+    print(gate.summary())
+
+    rng = np.random.default_rng(0)
+    shape = (1,) + gate.parsed.input_shape[1:]
+    sample = (rng.standard_normal(shape) * 0.5).astype(np.float32)
+    specs = gate.calibrate_quantization(sample)
+    first = next(iter(specs.items()))
+    print(f"[3] quantized: e.g. layer {first[0]} -> (N, m) with "
+          f"m_w={first[1].m_w}, m_x={first[1].m_x}, m_y={first[1].m_y}")
+
+    res = gate.explore(args.board, algo="rl")
+    print(f"[4] RL-DSE on {args.board}: best (N_i, N_l) = {res.best}, "
+          f"{res.evaluations} compiler calls, F_avg={res.f_max:.1f}%")
+
+    run = gate.build("emulation", *(res.best or (16, 32)))
+    x = jnp.asarray(sample)
+    t0 = time.perf_counter()
+    y_int8 = np.asarray(run(x))
+    emu_t = time.perf_counter() - t0
+    y_float = np.asarray(cnn.run_float(graph, x))
+    agree = (y_int8.argmax(-1) == y_float.argmax(-1)).mean()
+    print(f"[5] emulation: {emu_t:.2f}s; int8 vs float top-1 agreement "
+          f"{agree * 100:.0f}%")
+
+    if res.best:
+        rep = gate.latency_report(args.board, *res.best)
+        print(f"[6] modeled FPGA latency on {args.board}: "
+              f"{rep.total_s * 1e3:.2f} ms ({rep.gops:.1f} GOp/s)")
+        for lt in rep.layers:
+            print(f"      {lt.name:<12} {lt.kind:<5} {lt.time_s * 1e3:8.3f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: continuous batching with slot reuse.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 8 --slots 4
+
+Uses repro.launch.serve's engine: a fixed slot pool, per-slot lengths,
+masked decode attention, requests admitted as slots free up.
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    return serve_mod.main([
+        "--arch", args.arch, "--preset", "smoke",
+        "--slots", str(args.slots), "--requests", str(args.requests),
+        "--max-new", str(args.max_new)])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

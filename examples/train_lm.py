@@ -1,0 +1,45 @@
+"""End-to-end LM training driver example.
+
+Smoke preset (CPU, seconds):
+    PYTHONPATH=src python examples/train_lm.py --preset smoke
+
+~100M-parameter run (the deliverable-scale config; needs a beefier
+machine or pod — the same command with --mesh production runs on TPU):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+This is a thin veneer over repro.launch.train: resume, async
+checkpoints, straggler monitor and preemption handling all included.
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.preset == "smoke":
+        argv = ["--arch", "qwen2-1.5b", "--preset", "smoke",
+                "--steps", str(args.steps or 60),
+                "--seq-len", "64", "--global-batch", "8",
+                "--lr", "3e-3", "--warmup", "10"]
+    else:
+        # ~100M dense transformer (configs/lm100m.py): the
+        # train-for-a-few-hundred-steps deliverable scale
+        argv = ["--arch", "lm100m", "--preset", "full",
+                "--steps", str(args.steps or 300),
+                "--seq-len", "512", "--global-batch", "8",
+                "--lr", "6e-4", "--warmup", "50"]
+    if args.ckpt_dir:
+        argv += ["--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    return train_mod.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

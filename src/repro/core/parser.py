@@ -1,0 +1,363 @@
+"""Front-end parser: ONNX-lite graph -> linked pipeline of LayerInfo.
+
+This is §4.1's parser: it traverses graph nodes in topological order,
+extracts per-layer synthesis information (kernel shape, strides, pads,
+dilations, weights, biases), detects the Relu/Softmax activations that
+follow compute nodes, and fuses Conv→Relu→MaxPool chains into single
+pipeline stages — the paper's "combination of memory read/write,
+convolution and pooling kernels" (Fig. 6 caption).  The result is a
+linked structure preserving order, which the synthesis tool consumes to
+configure hardware pipelines, plus the feasible (N_i, N_l) option sets
+derived from the divisibility constraints of §4.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import Graph, Node, _norm2, _norm4
+
+# Pipeline stage kinds (the paper's five kernel roles; memory read/write
+# kernels bracket every stage implicitly).
+CONV = "conv"
+POOL = "pool"
+FC = "fc"  # Gemm — executed on the conv kernel with pool as pass-through
+
+
+@dataclasses.dataclass
+class LayerInfo:
+    """One pipelined stage: conv/fc (+fused relu) (+fused pool)."""
+
+    kind: str
+    name: str
+    # tensor names
+    input: str
+    output: str
+    weight: Optional[str] = None
+    bias: Optional[str] = None
+    # shapes (NCHW for conv/pool; (M,K)x(K,N) for fc)
+    in_shape: Tuple[int, ...] = ()
+    out_shape: Tuple[int, ...] = ()
+    # conv/pool attrs
+    kernel_shape: Tuple[int, int] = (1, 1)
+    strides: Tuple[int, int] = (1, 1)
+    pads: Tuple[int, int, int, int] = (0, 0, 0, 0)
+    dilations: Tuple[int, int] = (1, 1)
+    group: int = 1
+    # fused ops
+    relu: bool = False
+    softmax: bool = False
+    pool: Optional["LayerInfo"] = None  # fused pooling stage
+    pool_type: str = "max"              # max | avg (standalone pools)
+    # linked structure (paper: "saves layers in a linked structure")
+    prev: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
+    next: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
+
+    # -- derived quantities used by synthesis & DSE ---------------------
+    @property
+    def c_in(self) -> int:
+        if self.kind == FC:
+            return int(self.in_shape[-1])
+        return int(self.in_shape[1])
+
+    @property
+    def c_out(self) -> int:
+        if self.kind == FC:
+            return int(self.out_shape[-1])
+        return int(self.out_shape[1])
+
+    @property
+    def conv_out_shape(self) -> Tuple[int, ...]:
+        """Output of the compute stage itself (pre-pool when fused)."""
+        return self.pool.in_shape if self.pool is not None else self.out_shape
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulate count of the compute stage."""
+        if self.kind == FC:
+            m, k = self.in_shape[-2], self.in_shape[-1]
+            n = self.out_shape[-1]
+            return int(m * k * n)
+        n, c_out, h, w = self.conv_out_shape
+        kh, kw = self.kernel_shape
+        return int(n * c_out * h * w * kh * kw * (self.c_in // self.group))
+
+    @property
+    def ops(self) -> int:
+        """GOp convention of the paper's Tables 3/4: 2 ops per MAC."""
+        return 2 * self.macs
+
+    def weight_count(self) -> int:
+        if self.weight is None:
+            return 0
+        if self.kind == FC:
+            return int(self.c_in * self.c_out)
+        kh, kw = self.kernel_shape
+        return int(self.c_out * (self.c_in // self.group) * kh * kw)
+
+
+@dataclasses.dataclass
+class ParsedModel:
+    """Linked pipeline + option sets; what the synthesizer consumes."""
+
+    name: str
+    layers: List[LayerInfo]
+    graph: Graph
+    input_name: str
+    input_shape: Tuple[int, ...]
+    output_name: str
+
+    @property
+    def head(self) -> LayerInfo:
+        return self.layers[0]
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_ops(self) -> int:
+        return sum(l.ops for l in self.layers)
+
+    @property
+    def total_weights(self) -> int:
+        return sum(l.weight_count() for l in self.layers)
+
+    # -- §4.2 divisibility constraints ----------------------------------
+    def feasible_ni(self, cap: int = 64) -> List[int]:
+        """N_i must divide the input-channel (vector) width of every
+        compute layer to avoid padding.  The first conv layer's 3-channel
+        RGB input is zero-padded to the vector width by the memory-read
+        kernel (as PipeCNN does), so it is exempt."""
+        cands = []
+        widths = [l.c_in for l in self.layers[1:] if l.kind in (CONV, FC)]
+        for ni in range(1, cap + 1):
+            if _pow2(ni) and all(w % ni == 0 for w in widths):
+                cands.append(ni)
+        return cands
+
+    def feasible_nl(self, cap: int = 64) -> List[int]:
+        """N_l must divide the number of output features of every layer
+        to avoid idle lanes.  The final classifier layer is exempt: its
+        odd-sized output (e.g. 1000 classes) is zero-padded up to a lane
+        multiple by the memory-write kernel, as PipeCNN does — without
+        this the paper's own (16, 32) Arria-10 choice would be
+        infeasible for AlexNet/VGG."""
+        cands = []
+        feats = [l.c_out for l in self.layers[:-1] if l.kind in (CONV, FC)]
+        for nl in range(1, cap + 1):
+            if _pow2(nl) and all(f % nl == 0 for f in feats):
+                cands.append(nl)
+        return cands
+
+    def hardware_options(self, cap: int = 64) -> List[Tuple[int, int]]:
+        """All feasible (N_i, N_l) pairs — the DSE search space."""
+        return [(ni, nl) for ni in self.feasible_ni(cap) for nl in self.feasible_nl(cap)]
+
+
+def _pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def parse(graph: Graph) -> ParsedModel:
+    """Traverse the graph and emit the linked pipeline structure."""
+    layers: List[LayerInfo] = []
+    consumed: set = set()
+
+    node_list = graph.nodes
+    i = 0
+    while i < len(node_list):
+        node = node_list[i]
+        i += 1
+        if node.name in consumed:
+            continue
+        if node.op_type in ("Flatten", "Reshape", "Dropout", "Identity"):
+            continue  # pure data-movement; handled by memory-read schedule
+        if node.op_type == "Conv":
+            li = _conv_layer(graph, node)
+        elif node.op_type in ("Gemm", "MatMul"):
+            li = _fc_layer(graph, node)
+        elif node.op_type in ("MaxPool", "AveragePool", "GlobalAveragePool"):
+            # standalone pool (not fused behind a conv)
+            li = _pool_layer(graph, node)
+        elif node.op_type in ("Relu", "Softmax", "Add"):
+            raise_if_unfused(graph, node, layers)
+            continue
+        else:
+            continue
+        # fuse activation + pool chains greedily
+        _fuse_chain(graph, li, consumed)
+        layers.append(li)
+
+    if not layers:
+        raise ValueError(f"graph {graph.name!r} contains no compute layers")
+
+    # link the list (the paper's order-preserving structure)
+    for a, b in zip(layers, layers[1:]):
+        a.next, b.prev = b, a
+
+    inp = graph.inputs[0]
+    return ParsedModel(
+        name=graph.name,
+        layers=layers,
+        graph=graph,
+        input_name=inp.name,
+        input_shape=tuple(inp.shape),
+        output_name=layers[-1].output,
+    )
+
+
+def raise_if_unfused(graph: Graph, node: Node, layers: List[LayerInfo]) -> None:
+    """Activations should have been fused into the producing layer; a
+    dangling one (e.g. Relu straight on the graph input) is unsupported
+    by the pipelined kernel library."""
+    for li in layers:
+        if li.output == node.inputs[0] or (li.pool and li.pool.output == node.inputs[0]):
+            return
+        if node.outputs[0] in (li.output,):
+            return
+    # Softmax on the classifier output is recognised as fused elsewhere.
+    raise ValueError(
+        f"standalone {node.op_type} node {node.name!r} cannot be mapped to "
+        "the pipelined kernel library"
+    )
+
+
+def _conv_layer(graph: Graph, node: Node) -> LayerInfo:
+    w_name = node.inputs[1]
+    b_name = node.inputs[2] if len(node.inputs) > 2 else None
+    w_shape = graph.shape(w_name)
+    return LayerInfo(
+        kind=CONV,
+        name=node.name,
+        input=node.inputs[0],
+        output=node.outputs[0],
+        weight=w_name,
+        bias=b_name,
+        in_shape=graph.shape(node.inputs[0]),
+        out_shape=graph.shape(node.outputs[0]),
+        kernel_shape=_norm2(node.attr("kernel_shape", (w_shape[2], w_shape[3]))),
+        strides=_norm2(node.attr("strides", 1)),
+        pads=_norm4(node.attr("pads")),
+        dilations=_norm2(node.attr("dilations", 1)),
+        group=int(node.attr("group", 1)),
+    )
+
+
+def _fc_layer(graph: Graph, node: Node) -> LayerInfo:
+    w_name = node.inputs[1]
+    b_name = node.inputs[2] if len(node.inputs) > 2 else None
+    return LayerInfo(
+        kind=FC,
+        name=node.name,
+        input=node.inputs[0],
+        output=node.outputs[0],
+        weight=w_name,
+        bias=b_name,
+        in_shape=graph.shape(node.inputs[0]),
+        out_shape=graph.shape(node.outputs[0]),
+    )
+
+
+def _pool_layer(graph: Graph, node: Node) -> LayerInfo:
+    if node.op_type == "GlobalAveragePool":
+        in_shape = graph.shape(node.inputs[0])
+        ks: Tuple[int, int] = (in_shape[2], in_shape[3])
+        st: Tuple[int, int] = (1, 1)
+    else:
+        ks = _norm2(node.attr("kernel_shape"))
+        st = _norm2(node.attr("strides", ks[0]))
+    return LayerInfo(
+        kind=POOL,
+        name=node.name,
+        input=node.inputs[0],
+        output=node.outputs[0],
+        in_shape=graph.shape(node.inputs[0]),
+        out_shape=graph.shape(node.outputs[0]),
+        kernel_shape=ks,
+        strides=st,
+        pads=_norm4(node.attr("pads")),
+        pool_type="max" if node.op_type == "MaxPool" else "avg",
+    )
+
+
+def _fuse_chain(graph: Graph, li: LayerInfo, consumed: set) -> None:
+    """Fuse Relu / MaxPool / Softmax that immediately follow ``li``.
+
+    Mirrors the paper's hardware view: the conv kernel has a fused ReLU
+    stage, the pool kernel sits behind it on the pipe, and fully-connected
+    layers run on the conv kernel with pooling configured pass-through.
+    """
+    cur_out = li.output
+    while True:
+        consumers = [
+            n for n in graph.consumers_of(cur_out) if n.name not in consumed
+        ]
+        # only fuse when the tensor has exactly one consumer (pipe semantics)
+        if len(consumers) != 1:
+            break
+        n = consumers[0]
+        if n.op_type == "Relu":
+            li.relu = True
+            consumed.add(n.name)
+            cur_out = n.outputs[0]
+            li.output = cur_out
+        elif n.op_type == "Softmax":
+            li.softmax = True
+            consumed.add(n.name)
+            cur_out = n.outputs[0]
+            li.output = cur_out
+        elif n.op_type == "MaxPool" and li.kind == CONV and li.pool is None:
+            # only max-pool fuses into the conv kernel (its pooling
+            # stage computes max); average pools run standalone
+            pool = _pool_layer(graph, n)
+            li.pool = pool
+            consumed.add(n.name)
+            cur_out = n.outputs[0]
+            li.output = cur_out
+            li.out_shape = pool.out_shape
+        elif n.op_type in ("Flatten", "Reshape", "Dropout", "Identity"):
+            consumed.add(n.name)
+            cur_out = n.outputs[0]
+            li.output = cur_out
+        else:
+            break
+
+
+def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, Any]]:
+    """The host-program memory access schedule of §4.2: for each pipeline
+    stage, how many (N_i)-wide vectors the memory-read kernel fetches and
+    how many lanes are active.  Consumed by the pipelined executor and the
+    FPGA latency model."""
+    sched = []
+    for li in model.layers:
+        if li.kind == FC:
+            vec_per_row = -(-li.c_in // n_i)  # ceil
+            rows = int(np.prod(li.in_shape[:-1]))
+            sched.append(
+                dict(
+                    layer=li.name,
+                    kind=li.kind,
+                    read_vectors=rows * vec_per_row,
+                    weight_vectors=li.c_out * vec_per_row,
+                    lanes=min(n_l, li.c_out),
+                    write_elems=int(np.prod(li.out_shape)),
+                )
+            )
+        else:
+            n, c_out, h, w = li.out_shape if li.pool is None else li.pool.in_shape
+            kh, kw = li.kernel_shape
+            vec_per_patch = -(-(li.c_in * kh * kw) // n_i)
+            sched.append(
+                dict(
+                    layer=li.name,
+                    kind=li.kind,
+                    read_vectors=n * h * w * vec_per_patch,
+                    weight_vectors=c_out * vec_per_patch,
+                    lanes=min(n_l, c_out),
+                    write_elems=int(np.prod(li.out_shape)),
+                )
+            )
+    return sched

@@ -1,0 +1,127 @@
+"""Pipelined int8 executor — the "host program" of §4.2.
+
+Takes a parsed model + per-layer (N, m) quantization specs, quantizes
+weights/biases once, and runs inference by streaming each pipeline stage
+through the fused Pallas kernels (conv+ReLU+pool on the conv kernel, FC
+on the same matrix unit with pooling configured pass-through — §5).
+Activation tensors move between stages as int8 at the per-layer
+fixed-point scale, mirroring the OpenCL pipes' int8 payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from . import parser as P
+from .quantize import QuantSpec, quantize_weights
+
+
+@dataclasses.dataclass
+class QuantizedLayer:
+    info: P.LayerInfo
+    spec: QuantSpec
+    w_q: Optional[jnp.ndarray]
+    b_q: Optional[jnp.ndarray]
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """int8-ready pipeline (weights quantized with the *given* specs)."""
+
+    name: str
+    layers: List[QuantizedLayer]
+    input_m: int          # fixed-point exponent of the network input
+    output_m: int
+    parsed: P.ParsedModel
+
+    @property
+    def hardware_options(self):
+        return self.parsed.hardware_options
+
+
+def build_quantized(model: P.ParsedModel,
+                    specs: Dict[str, QuantSpec]) -> QuantizedModel:
+    """Apply the user-given (N, m) pairs (the paper: CNN2Gate does not
+    *perform* quantization, it *applies* provided values)."""
+    layers: List[QuantizedLayer] = []
+    for li in model.layers:
+        # pool stages carry no weights: int8 passes through at the
+        # incoming fixed-point scale (no spec, no requant)
+        spec = specs.get(li.name) if li.kind == P.POOL else specs[li.name]
+        w = model.graph.initializers[li.weight] if li.weight else None
+        b = model.graph.initializers[li.bias] if li.bias else None
+        w_q, b_q = (None, None)
+        if w is not None:
+            w_q, b_q = quantize_weights(w, b, spec)
+            w_q = jnp.asarray(w_q)
+            b_q = jnp.asarray(b_q) if b_q is not None else None
+        layers.append(QuantizedLayer(li, spec, w_q, b_q))
+    return QuantizedModel(
+        name=model.name,
+        layers=layers,
+        input_m=specs[model.layers[0].name].m_x,
+        output_m=specs[model.layers[-1].name].m_y,
+        parsed=model,
+    )
+
+
+def run_int8(qm: QuantizedModel, x_float: jnp.ndarray,
+             n_i: int = 16, n_l: int = 32,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Full pipelined inference.  ``x_float`` is the NCHW float input;
+    returns float logits (dequantized with the final layer's m_y).
+
+    (N_i, N_l) select kernel block shapes: N_l lanes -> output-channel
+    tile (x8: eight 8-bit MACs per lane-vector element feed one MXU
+    row), N_i -> contraction granularity.  Functionally the result is
+    identical for every option — options trade resources for speed,
+    exactly as in the paper.
+    """
+    scale = 2.0 ** qm.input_m
+    h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
+    block_cout = max(8 * n_l, 8)
+    for ql in qm.layers:
+        li = ql.info
+        if li.kind == P.CONV:
+            pool = None
+            if li.pool is not None:
+                pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+            h = ops.qconv2d_nchw(
+                h, ql.w_q, ql.b_q,
+                strides=li.strides, pads=li.pads,
+                shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
+                block_cout=block_cout, interpret=interpret)
+        elif li.kind == P.POOL:
+            pool_fn = (ops.avgpool2d_nchw if li.pool_type == "avg"
+                       else ops.maxpool2d_nchw)
+            h = pool_fn(h, li.kernel_shape[0], li.strides[0], li.pads)
+        elif li.kind == P.FC:
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            h = ops.qgemm(h, ql.w_q, ql.b_q, shift=ql.spec.requant_shift,
+                          relu=li.relu,
+                          block_n=min(128, max(8 * n_l, 8)),
+                          block_k=128,
+                          interpret=interpret)
+        else:  # pragma: no cover - parser only emits the three kinds
+            raise ValueError(li.kind)
+    logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
+    last = qm.layers[-1].info
+    if last.softmax:
+        logits = jax.nn.softmax(logits, axis=-1)
+    return logits
+
+
+def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
+    """(input, weight, output) int8 bytes of a stage — feeds the FPGA
+    latency model and the memory-schedule report."""
+    in_b = int(np.prod(li.in_shape))
+    w_b = li.weight_count()
+    out_b = int(np.prod(li.out_shape))
+    return in_b, w_b, out_b

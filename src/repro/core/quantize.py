@@ -1,0 +1,131 @@
+"""(N, m) fixed-point post-training quantization application (§4.2).
+
+The paper's "Physical domain" step: CNN2Gate *does not invent* a
+quantization — it applies a user-given per-layer ``(N, m)`` pair where a
+fixed-point value is represented as ``N × 2^-m`` with 8-bit arithmetic
+units.  This module implements:
+
+  * ``QuantSpec`` — the per-layer (m_w, m_x, m_y) exponents (weights,
+    input activations, output activations).  All scales are powers of
+    two, matching the paper's shift-based arithmetic.
+  * ``quantize_weights`` — float weights/biases → int8 N with the given
+    m (biases are int32 at scale 2^-(m_w+m_x) so they add directly into
+    the int32 accumulator).
+  * ``calibrate`` — a convenience PTQ calibrator (max-abs, power-of-two)
+    standing in for the external tool the paper assumes the user ran.
+  * ``requant_shift`` — the right-shift that maps int32 accumulators back
+    to int8 outputs: shift = m_w + m_x - m_y.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Per-layer fixed-point format: value = N * 2^-m."""
+
+    m_w: int  # weight fraction bits
+    m_x: int  # input-activation fraction bits
+    m_y: int  # output-activation fraction bits
+
+    @property
+    def requant_shift(self) -> int:
+        """int32 accumulator (scale 2^-(m_w+m_x)) -> int8 out (scale 2^-m_y)."""
+        s = self.m_w + self.m_x - self.m_y
+        if s < 0:
+            raise ValueError(f"negative requant shift for {self}")
+        return s
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 payload + its fixed-point exponent m (value = q * 2^-m)."""
+
+    q: np.ndarray
+    m: int
+
+    def dequantize(self) -> np.ndarray:
+        return self.q.astype(np.float32) * (2.0 ** -self.m)
+
+
+def quantize_array(x: np.ndarray, m: int, bits: int = 8) -> np.ndarray:
+    """Round-to-nearest fixed-point quantization to ``bits`` at scale 2^-m."""
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = np.clip(np.rint(np.asarray(x, np.float64) * (2.0 ** m)), lo, hi)
+    dtype = np.int8 if bits <= 8 else np.int32
+    return q.astype(dtype)
+
+
+def dequantize_array(q: np.ndarray, m: int) -> np.ndarray:
+    return q.astype(np.float32) * (2.0 ** -m)
+
+
+def quantize_weights(
+    w: np.ndarray, b: Optional[np.ndarray], spec: QuantSpec
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Apply the given (N, m) format: int8 weights, int32 biases at the
+    accumulator scale (so bias adds need no extra shift)."""
+    wq = quantize_array(w, spec.m_w, bits=8)
+    bq = None
+    if b is not None:
+        bq = quantize_array(b, spec.m_w + spec.m_x, bits=32)
+    return wq, bq
+
+
+def requantize(acc: np.ndarray, spec: QuantSpec, relu: bool = False) -> np.ndarray:
+    """int32 accumulator -> int8 output via arithmetic right shift with
+    round-to-nearest (add half before shifting), optional fused ReLU."""
+    s = spec.requant_shift
+    acc = np.asarray(acc, np.int64)
+    if s > 0:
+        acc = (acc + (1 << (s - 1))) >> s
+    if relu:
+        acc = np.maximum(acc, 0)
+    return np.clip(acc, INT8_MIN, INT8_MAX).astype(np.int8)
+
+
+def best_pow2_exponent(x: np.ndarray, bits: int = 8) -> int:
+    """Largest m such that max|x| * 2^m still fits in ``bits`` signed —
+    the standard max-abs power-of-two PTQ rule."""
+    amax = float(np.max(np.abs(x))) if x.size else 0.0
+    if amax == 0.0:
+        return bits - 1
+    hi = 2 ** (bits - 1) - 1
+    m = int(np.floor(np.log2(hi / amax)))
+    return max(-(bits - 1), min(m, 24))
+
+
+def calibrate(
+    weights: Dict[str, np.ndarray],
+    activations: Dict[str, np.ndarray],
+    layer_io: Iterable[Tuple[str, str, str, str]],
+) -> Dict[str, QuantSpec]:
+    """Produce per-layer QuantSpecs from sample activations.
+
+    ``layer_io`` yields (layer_name, weight_tensor, input_tensor,
+    output_tensor).  This plays the role of the user's external PTQ tool
+    (e.g. [3] in the paper): CNN2Gate itself only *applies* the result.
+    """
+    specs: Dict[str, QuantSpec] = {}
+    for name, w_name, in_name, out_name in layer_io:
+        m_w = best_pow2_exponent(weights[w_name])
+        m_x = best_pow2_exponent(activations[in_name])
+        m_y = best_pow2_exponent(activations[out_name])
+        # keep the requant shift non-negative (paper's shift-only path)
+        m_y = min(m_y, m_w + m_x)
+        specs[name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
+    return specs
+
+
+def quantization_error(x: np.ndarray, m: int, bits: int = 8) -> float:
+    """RMS relative error of round-tripping x through (N, m)."""
+    q = quantize_array(x, m, bits)
+    xd = dequantize_array(q, m)
+    denom = float(np.sqrt(np.mean(x.astype(np.float64) ** 2))) or 1.0
+    return float(np.sqrt(np.mean((xd - x) ** 2))) / denom

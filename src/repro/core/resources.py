@@ -1,0 +1,185 @@
+"""Hardware resource models — the "compiler resource estimation" oracle.
+
+The paper's DSE queries the Intel OpenCL compiler's first synthesis stage
+for estimated %LUT/%DSP/%RAM/%register utilization.  Neither that
+compiler nor FPGA hardware exist in this container, so this module
+provides an **analytical estimator calibrated against the paper's own
+published synthesis results** (Tables 1–3):
+
+  anchors: 5CSEMA5 @ (8,8) -> ALM 26K, DSP 72, RAM 397/397, 2 Mbit
+           Arria 10 @ (16,32) -> ALM 129K (30 %), DSP 300 (20 %), RAM 40 %
+           5CSEMA4 @ (1,1) -> must NOT fit (control logic alone too big)
+           VGG-16 uses ~8 % more Arria-10 RAM blocks than AlexNet
+
+  fitted model (documented, not hard-coded decisions):
+           ALM        = 11300 + 230 * (N_i*N_l)
+           DSP        = 40    + ceil(N_i*N_l / 2)      # dual int8 MAC/DSP
+           RAM blocks = 148 + 1.2 * (N_i*N_l) + 2.82 * weight_Mbytes
+           regs       = 2.5 * ALM   (of 4 * ALM_avail)
+
+For TPU targets the estimator is **not** analytical: it reads the real
+XLA compiled artifact (memory_analysis / cost_analysis) — see
+``TPUResourceModel`` and ``repro.roofline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+# ------------------------------------------------------------------ FPGA
+
+@dataclasses.dataclass(frozen=True)
+class FPGAProfile:
+    """Published capacities of the paper's three boards (Table 2)."""
+
+    name: str
+    alm: int
+    dsp: int
+    ram_blocks: int
+    mem_bits: int
+    f_max_mhz: float          # Table 1 achieved kernel clock
+    ddr_gbps: float           # calibrated effective DDR bandwidth
+    ram_bits_per_block: int = 10_000
+
+    @property
+    def reg(self) -> int:
+        return 4 * self.alm
+
+
+CYCLONE_V_5CSEMA4 = FPGAProfile(
+    "Cyclone V SoC 5CSEMA4", alm=15_000, dsp=83, ram_blocks=321,
+    mem_bits=2_000_000, f_max_mhz=131.0, ddr_gbps=0.78)
+CYCLONE_V_5CSEMA5 = FPGAProfile(
+    "Cyclone V SoC 5CSEMA5", alm=32_000, dsp=87, ram_blocks=397,
+    mem_bits=4_000_000, f_max_mhz=131.0, ddr_gbps=0.78)
+ARRIA_10_GX1150 = FPGAProfile(
+    "Arria 10 GX 1150", alm=427_000, dsp=1516, ram_blocks=2713,
+    mem_bits=55_500_000, f_max_mhz=199.0, ddr_gbps=4.95,
+    ram_bits_per_block=20_000)
+
+FPGA_BOARDS: Dict[str, FPGAProfile] = {
+    "5CSEMA4": CYCLONE_V_5CSEMA4,
+    "5CSEMA5": CYCLONE_V_5CSEMA5,
+    "ARRIA10": ARRIA_10_GX1150,
+}
+
+# Framework option caps (§5 of the paper: "limited options to increase the
+# level of parallelism" — the memory-read kernel's vector width is bounded
+# by the 128-bit DDR burst (N_i <= 16) and the pipe width bounds N_l <= 32).
+NI_CAP = 16
+NL_CAP = 32
+
+
+@dataclasses.dataclass
+class ResourceReport:
+    """What the 'compiler' hands back to the DSE agent (§4.4)."""
+
+    percents: Dict[str, float]          # {lut, dsp, mem, reg} in [0, 100+]
+    raw: Dict[str, float]
+    fits: bool
+
+    @property
+    def f_avg(self) -> float:
+        """Eq. (5): average usage factor."""
+        p = self.percents
+        return (p["lut"] + p["dsp"] + p["mem"] + p["reg"]) / 4.0
+
+
+def estimate_fpga(profile: FPGAProfile, n_i: int, n_l: int,
+                  weight_bytes: int) -> ResourceReport:
+    """Calibrated analytical stand-in for the vendor compiler estimate."""
+    alm = 11_300 + 230.0 * (n_i * n_l)
+    dsp = 40 + math.ceil(n_i * n_l / 2)
+    ram = 148 + 1.2 * (n_i * n_l) + 2.815 * (weight_bytes / 1e6)
+    regs = 2.5 * alm
+    mem_bits = ram * profile.ram_bits_per_block * 0.5
+    percents = {
+        "lut": 100.0 * alm / profile.alm,
+        "dsp": 100.0 * dsp / profile.dsp,
+        "mem": 100.0 * ram / profile.ram_blocks,
+        "reg": 100.0 * regs / profile.reg,
+    }
+    raw = {"alm": alm, "dsp": dsp, "ram_blocks": ram, "regs": regs,
+           "mem_bits": mem_bits}
+    fits = all(v <= 100.0 for v in percents.values())
+    return ResourceReport(percents=percents, raw=raw, fits=fits)
+
+
+# ------------------------------------------------------------------- TPU
+
+@dataclasses.dataclass(frozen=True)
+class TPUProfile:
+    """TPU v5e-class chip constants used across roofline + DSE."""
+
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12       # per chip
+    peak_int8_ops: float = 394e12
+    hbm_bandwidth: float = 819e9          # bytes/s
+    hbm_bytes: int = 16 * 1024 ** 3
+    vmem_bytes: int = 128 * 1024 ** 2     # ~128 MiB SRAM class budget
+    ici_link_bandwidth: float = 50e9      # bytes/s per link
+    ici_links: int = 4                    # 2-D torus: 4 links/chip
+    mxu_tile: Tuple[int, int] = (128, 128)
+
+
+TPU_V5E = TPUProfile()
+
+
+def tpu_report_from_compiled(compiled, profile: TPUProfile = TPU_V5E,
+                             collective_bytes: float = 0.0) -> ResourceReport:
+    """Map a real XLA compiled artifact onto the four DSE quotas.
+
+    lut -> HBM residency %, dsp -> arithmetic-intensity balance (time on
+    MXU vs peak), mem -> temp (activation/workspace) pressure %,
+    reg -> collective pressure relative to compute.  These play the same
+    role the four FPGA quotas play in Algorithm 1: exceeding 100 on any
+    quota means 'does not fit'.
+    """
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    resident = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes)
+    t_compute = flops / profile.peak_bf16_flops
+    t_memory = bytes_acc / profile.hbm_bandwidth
+    t_coll = collective_bytes / (profile.ici_links * profile.ici_link_bandwidth)
+    denom = max(t_compute, 1e-12)
+    percents = {
+        "lut": 100.0 * resident / profile.hbm_bytes,
+        "dsp": 100.0 * min(t_compute / max(t_compute, t_memory, t_coll), 1.0),
+        "mem": 100.0 * ma.temp_size_in_bytes / profile.hbm_bytes,
+        "reg": 100.0 * min(t_coll / denom, 2.0) / 2.0,
+    }
+    raw = {"flops": flops, "bytes": bytes_acc, "resident": resident,
+           "t_compute": t_compute, "t_memory": t_memory,
+           "t_collective": t_coll, "collective_bytes": collective_bytes}
+    fits = percents["lut"] <= 100.0
+    return ResourceReport(percents=percents, raw=raw, fits=fits)
+
+
+# ------------------------------------------------- FPGA latency model
+
+def fpga_layer_time_s(profile: FPGAProfile, n_i: int, n_l: int,
+                      macs: int, in_bytes: int, w_bytes: int,
+                      out_bytes: int) -> Tuple[float, float, float]:
+    """max(compute, memory) per pipelined stage (batch = 1).
+
+    compute: one MAC per lane-vector element per cycle -> macs/(N_i*N_l*f).
+    memory : weights + input + output once over effective DDR bandwidth
+             (the deep pipeline means features stream, §3.2.3).
+    Returns (time_s, t_compute, t_memory).
+
+    Calibration residuals vs the paper's Table 1 (batch = 1) are
+    reported by benchmarks/table1_latency.py: AlexNet/Arria and
+    AlexNet/Cyclone within ~1 %, VGG/Arria -14 %, VGG/Cyclone -53 %.
+    The VGG-on-Cyclone underestimate is expected: Table 1 shows that
+    board's RAM at 100 % — feature maps spill and the resulting stall
+    traffic is not captured by this first-order streaming model (the
+    paper makes the same point about buffer limits in §5).
+    """
+    f = profile.f_max_mhz * 1e6
+    t_c = macs / (n_i * n_l * f)
+    t_m = (in_bytes + w_bytes + out_bytes) / (profile.ddr_gbps * 1e9)
+    return max(t_c, t_m), t_c, t_m

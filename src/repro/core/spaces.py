@@ -1,0 +1,135 @@
+"""Concrete design spaces for the DSE fitters.
+
+``CNNDesignSpace`` is the paper's own (N_i, N_l) space.
+``ShardingSpace`` is the same fitter lifted to the TPU pod: options are
+parallelism knobs (remat x microbatch x sequence-parallel x ZeRO-2),
+the "vendor compiler" is XLA itself (`lower().compile()` on the
+production mesh), and the four Algorithm-1 quotas map to HBM residency,
+compute-fraction-of-step, temp pressure and collective pressure
+(DESIGN.md §2 table).  Like the paper's first-stage estimation, the
+fitter evaluates a depth-reduced model and scales — each evaluation is
+a real compile, just a cheap one.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from .dse import DesignSpace
+from .parser import ParsedModel
+from .resources import (FPGAProfile, ResourceReport, TPU_V5E, NI_CAP,
+                        NL_CAP, estimate_fpga)
+
+
+class CNNDesignSpace(DesignSpace):
+    """The paper's (N_i, N_l) space for a parsed CNN on a given board.
+
+    Options obey the §4.2 divisibility constraints (from the parsed
+    model) and the framework caps (N_i <= 16 from the 128-bit DDR burst,
+    N_l <= 32 from the pipe width — the paper's 'limited options'
+    discussion in §5).  ``evaluate`` calls the calibrated analytical
+    stand-in for the vendor compiler.
+    """
+
+    def __init__(self, model: ParsedModel, board: FPGAProfile,
+                 ni_cap: int = NI_CAP, nl_cap: int = NL_CAP):
+        self.model = model
+        self.board = board
+        self._ni = [n for n in model.feasible_ni(ni_cap) if n <= ni_cap]
+        self._nl = [n for n in model.feasible_nl(nl_cap) if n <= nl_cap]
+        self.weight_bytes = model.total_weights  # int8: 1 byte/weight
+
+    def options(self) -> List[Tuple[int, int]]:
+        return [(ni, nl) for ni in self._ni for nl in self._nl]
+
+    def axes(self) -> List[List[int]]:
+        return [list(self._ni), list(self._nl)]
+
+    def evaluate(self, option: Tuple[int, int]) -> ResourceReport:
+        ni, nl = option
+        return estimate_fpga(self.board, ni, nl, self.weight_bytes)
+
+    def tiebreak(self, option: Tuple[int, int]) -> float:
+        # prefer balanced (N_i, N_l) — see DesignSpace.tiebreak docstring
+        return float(min(option))
+
+
+DEFAULT_POD_AXES: List[Tuple[str, List]] = [
+    ("remat", ["none", "dots", "full"]),
+    ("n_micro", [1, 4, 8, 16]),
+    ("sequence_parallel", [False, True]),
+]
+
+
+class ShardingSpace(DesignSpace):
+    """Pod-scale parallelism options scored by the real XLA compiler.
+
+    ``evaluate`` compiles a depth-reduced variant of the cell on the
+    production mesh (estimation stage, like the paper's first synthesis
+    stage) and scales residency/terms back to full depth.  The reward
+    quotas (Algorithm 1 unchanged):
+
+        lut  -> projected HBM residency %      (hard fit criterion)
+        dsp  -> compute fraction of the step % (utilization == throughput)
+        mem  -> projected temp pressure %
+        reg  -> collective/compute pressure %
+    """
+
+    def __init__(self, arch: str, shape_name: str,
+                 axes: Optional[List[Tuple[str, List]]] = None,
+                 eval_depth: int = 4, flash_accounting: bool = True,
+                 profile=TPU_V5E):
+        self.arch = arch
+        self.shape_name = shape_name
+        self._axes = axes or DEFAULT_POD_AXES
+        self.eval_depth = eval_depth
+        self.flash = flash_accounting
+        self.profile = profile
+        from repro import configs
+        self._cfg = configs.get(arch)
+        self._scale = max(1, self._cfg.n_layers // max(eval_depth, 1))
+
+    def axes(self) -> List[List]:
+        return [vals for _n, vals in self._axes]
+
+    def options(self) -> List[Tuple]:
+        import itertools
+        return list(itertools.product(*self.axes()))
+
+    def _policy_kwargs(self, option: Tuple) -> Dict[str, Any]:
+        return {name: val for (name, _), val in zip(self._axes, option)}
+
+    def evaluate(self, option: Tuple) -> ResourceReport:
+        from repro.launch.dryrun import lower_cell, _depth_cfg
+        from repro.sharding import PolicyOptions
+        import dataclasses
+        opts = PolicyOptions(**self._policy_kwargs(option))
+        cfg1, _ = _depth_cfg(self._cfg, 1)  # family-consistent reduction
+        depth_over = {"n_layers": cfg1.n_layers * self.eval_depth}
+        if self._cfg.family == "encdec":
+            depth_over["encoder_layers"] = depth_over["n_layers"]
+        _c, meta = lower_cell(
+            self.arch, self.shape_name, options=opts,
+            cfg_override=depth_over, extrapolate=False,
+            flash_accounting=self.flash)
+        # project depth-linear quantities back to full depth
+        hbm = self.profile.hbm_bytes
+        peak = meta["arg_bytes"] + meta["out_bytes"] \
+            + meta["temp_bytes"] * self._scale
+        t_c = meta["t_compute"] * self._scale
+        t_m = meta["t_memory_fused"] * self._scale
+        t_col = meta["t_collective"] * self._scale
+        t_step = max(t_c, t_m, t_col)
+        percents = {
+            "lut": 100.0 * peak / hbm,
+            "dsp": 100.0 * t_c / max(t_step, 1e-12),
+            "mem": 100.0 * meta["temp_bytes"] * self._scale / hbm,
+            "reg": 100.0 * min(t_col / max(t_c, 1e-12), 2.0) / 2.0,
+        }
+        raw = {"peak": peak, "t_compute": t_c, "t_memory": t_m,
+               "t_collective": t_col, "t_step": t_step,
+               "option": self._policy_kwargs(option)}
+        fits = percents["lut"] <= 100.0
+        return ResourceReport(percents=percents, raw=raw, fits=fits)
+
+    def tiebreak(self, option: Tuple) -> float:
+        return 0.0

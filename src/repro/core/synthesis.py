@@ -1,0 +1,190 @@
+"""CNN2Gate automated high-level synthesis workflow (§4.2, Fig. 4a).
+
+``CNN2Gate`` is the user-facing orchestrator:
+
+    gate = CNN2Gate.from_graph(alexnet())          # ONNX-lite front end
+    gate.apply_quantization(specs)                  # given (N, m) pairs
+    fit  = gate.explore("ARRIA10", algo="rl")       # hardware-aware DSE
+    run  = gate.build(mode="emulation")             # fast CPU verify
+    y    = run(x)                                   # inference
+    rep  = gate.latency_report("ARRIA10", *fit.best)  # Table-1 model
+
+Modes:
+  * ``emulation``  — CPU compile (seconds), Pallas kernels in interpret
+    mode; functional verification exactly like the paper's OpenCL
+    emulator (the paper stresses this loop: verify before the 10-hour
+    synthesis).
+  * ``fullflow``   — AOT ``jit(...).lower().compile()`` of the pipeline:
+    the TPU-target "synthesis".  On a TPU machine this produces the real
+    executable; here it produces the compiled CPU artifact and the
+    resource report (our stand-in for the bitstream + fitter report).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import collect_activations
+from . import dse as dse_mod
+from . import parser as P
+from . import pipeline as pipe
+from .graph import Graph
+from .quantize import QuantSpec, calibrate
+from .resources import (FPGA_BOARDS, FPGAProfile, fpga_layer_time_s)
+from .spaces import CNNDesignSpace
+
+
+@dataclasses.dataclass
+class LayerTiming:
+    name: str
+    kind: str
+    time_s: float
+    t_compute: float
+    t_memory: float
+    macs: int
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    board: str
+    n_i: int
+    n_l: int
+    layers: List[LayerTiming]
+
+    @property
+    def total_s(self) -> float:
+        return sum(l.time_s for l in self.layers)
+
+    @property
+    def gops(self) -> float:
+        total_ops = 2 * sum(l.macs for l in self.layers)
+        return total_ops / self.total_s / 1e9
+
+
+class CNN2Gate:
+    """Parse -> (apply quantization) -> explore -> build -> run."""
+
+    def __init__(self, parsed: P.ParsedModel):
+        self.parsed = parsed
+        self.quantized: Optional[pipe.QuantizedModel] = None
+        self.specs: Optional[Dict[str, QuantSpec]] = None
+
+    # ---------------------------------------------------------- front end
+    @classmethod
+    def from_graph(cls, graph: Graph) -> "CNN2Gate":
+        return cls(P.parse(graph))
+
+    @classmethod
+    def from_file(cls, path: str) -> "CNN2Gate":
+        from . import onnx_lite
+        return cls.from_graph(onnx_lite.load(path))
+
+    # ------------------------------------------------------- quantization
+    def apply_quantization(self, specs: Dict[str, QuantSpec]) -> None:
+        """Apply *given* per-layer (N, m) pairs (§4.2 Physical domain)."""
+        self.specs = specs
+        self.quantized = pipe.build_quantized(self.parsed, specs)
+
+    def calibrate_quantization(self, sample_input: np.ndarray) -> Dict[str, QuantSpec]:
+        """Convenience PTQ (stand-in for the user's external tool)."""
+        import dataclasses as _dc
+        acts = collect_activations(self.parsed.graph, sample_input)
+        acts[self.parsed.input_name] = np.asarray(sample_input)
+        layer_io = [
+            (li.name, li.weight, li.input, li.output)
+            for li in self.parsed.layers if li.weight is not None
+        ]
+        weights = self.parsed.graph.initializers
+        specs = calibrate(weights, acts, layer_io)
+        # scale consistency through standalone pool stages: pools pass
+        # int8 through at the incoming fixed-point scale, so the next
+        # compute layer's m_x must equal the producer's m_y
+        cur_m = None
+        for li in self.parsed.layers:
+            if li.weight is None:            # pool stage
+                continue
+            spec = specs[li.name]
+            if cur_m is not None and spec.m_x != cur_m:
+                spec = _dc.replace(spec, m_x=cur_m,
+                                   m_y=min(spec.m_y, spec.m_w + cur_m))
+                specs[li.name] = spec
+            cur_m = spec.m_y
+        self.apply_quantization(specs)
+        return specs
+
+    # ---------------------------------------------------------------- DSE
+    def design_space(self, board: str) -> CNNDesignSpace:
+        return CNNDesignSpace(self.parsed, FPGA_BOARDS[board])
+
+    def explore(self, board: str, algo: str = "rl",
+                thresholds: Optional[Dict[str, float]] = None,
+                eval_cost_s: float = 0.0, **kw) -> dse_mod.DSEResult:
+        space = self.design_space(board)
+        if algo == "bf":
+            return dse_mod.brute_force(space, thresholds, eval_cost_s)
+        if algo == "rl":
+            return dse_mod.rl_dse(space, thresholds,
+                                  eval_cost_s=eval_cost_s, **kw)
+        raise ValueError(f"unknown DSE algorithm {algo!r}")
+
+    # -------------------------------------------------------------- build
+    def build(self, mode: str = "emulation", n_i: int = 16, n_l: int = 32
+              ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Return a callable running the int8 pipeline.
+
+        emulation: interpret-mode kernels (fast CPU verify).
+        fullflow : AOT-compiled executable for the default backend (the
+        TPU-target synthesis path; identical numerics).
+        """
+        if self.quantized is None:
+            raise RuntimeError("apply_quantization() or "
+                               "calibrate_quantization() first")
+        qm = self.quantized
+        if mode == "emulation":
+            return lambda x: pipe.run_int8(qm, x, n_i, n_l, interpret=True)
+        if mode == "fullflow":
+            interpret = jax.default_backend() != "tpu"
+
+            def fn(x):
+                return pipe.run_int8(qm, x, n_i, n_l, interpret=interpret)
+
+            jitted = jax.jit(fn)
+            sample = jnp.zeros((1,) + self.parsed.input_shape[1:], jnp.float32)
+            t0 = time.perf_counter()
+            compiled = jitted.lower(sample).compile()  # the "synthesis"
+            self.synthesis_time_s = time.perf_counter() - t0
+            self.compiled = compiled
+            return jitted
+        raise ValueError(f"unknown mode {mode!r}")
+
+    # ------------------------------------------------------ latency model
+    def latency_report(self, board: str, n_i: int, n_l: int) -> LatencyReport:
+        """Analytical Table-1/Fig-6 latency model (see resources.py)."""
+        profile = FPGA_BOARDS[board]
+        rows: List[LayerTiming] = []
+        for li in self.parsed.layers:
+            in_b, w_b, out_b = pipe.layer_bytes(li)
+            t, tc, tm = fpga_layer_time_s(profile, n_i, n_l, li.macs,
+                                          in_b, w_b, out_b)
+            rows.append(LayerTiming(li.name, li.kind, t, tc, tm, li.macs))
+        return LatencyReport(board=board, n_i=n_i, n_l=n_l, layers=rows)
+
+    # ------------------------------------------------------------ summary
+    def summary(self) -> str:
+        pm = self.parsed
+        lines = [f"model {pm.name}: {len(pm.layers)} pipeline stages, "
+                 f"{pm.total_ops / 1e9:.2f} GOp, "
+                 f"{pm.total_weights / 1e6:.1f} M weights"]
+        for li in pm.layers:
+            fused = "+relu" if li.relu else ""
+            fused += "+pool" if li.pool is not None else ""
+            fused += "+softmax" if li.softmax else ""
+            lines.append(f"  {li.name:<12} {li.kind}{fused:<14} "
+                         f"in={li.in_shape} out={li.out_shape} "
+                         f"macs={li.macs / 1e6:.1f}M")
+        return "\n".join(lines)

@@ -1,0 +1,131 @@
+"""Blocked online-softmax (flash) attention Pallas kernel, GQA-aware.
+
+TPU target: grid (batch*heads, q_blocks, kv_blocks) with the kv axis
+innermost so the (m, l, acc) running statistics live in VMEM scratch
+across kv iterations.  GQA is expressed in the K/V BlockSpec index maps
+(query head h reads kv head h // group), so no repeat/materialisation
+of K/V ever happens.  Causal and sliding-window masks are fused.
+
+Validated in interpret mode against ``ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, kv_steps: int,
+                  causal: bool, window: Optional[int], q_offset: int,
+                  kv_len: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)            # fully-masked rows -> 0
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "scale",
+                     "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, HKV, Skv, D)
+    v: jnp.ndarray,  # (B, HKV, Skv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(block_q, _rup(sq, 8))
+    bk = min(block_k, _rup(skv, 128))
+    sqp, skvp = _rup(sq, bq), _rup(skv, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    # flatten (B, H) -> grid axis; kv index map implements GQA sharing
+    qf = qp.reshape(b * h, sqp, d)
+    kf = kp.reshape(b * hkv, skvp, d)
+    vf = vp.reshape(b * hkv, skvp, d)
+    kv_steps = skvp // bk
+
+    def kv_index(bh, qi, ki):
+        return ((bh // h) * hkv + (bh % h) // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, block_q=bq, block_k=bk,
+            kv_steps=kv_steps, causal=causal, window=window,
+            q_offset=q_offset, kv_len=skv),
+        grid=(b * h, sqp // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sqp, d)[:, :, :sq]
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles layout conversion from the ONNX-lite world (NCHW / OIHW) to the
+TPU-native layouts the kernels use (NHWC / HWIO), zero-padding for
+convolution pads (zero == symmetric quantization zero-point), and the
+interpret-mode switch: on this CPU container every kernel runs with
+``interpret=True`` (Python-evaluated, bit-exact semantics); on a real
+TPU the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import qconv as _qconv
+from . import qgemm as _qgemm
+from . import flash_attention as _flash
+from . import ssd_scan as _ssd
+from . import ref as ref  # re-export oracles for callers/tests
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qgemm(x, w, b=None, *, shift: int, relu: bool = False,
+          block_m: int = 128, block_n: int = 128, block_k: int = 128,
+          interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _qgemm.qgemm(x, w, b, shift=shift, relu=relu, block_m=block_m,
+                        block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+def qconv2d_nchw(
+    x: jnp.ndarray,  # (N, Cin, H, W) int8
+    w: jnp.ndarray,  # (Cout, Cin, KH, KW) int8 (OIHW, ONNX layout)
+    b: Optional[jnp.ndarray],
+    *,
+    strides: Tuple[int, int] = (1, 1),
+    pads: Tuple[int, int, int, int] = (0, 0, 0, 0),
+    shift: int = 0,
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,
+    block_cout: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """ONNX-layout entry point for the fused conv+ReLU+pool kernel.
+    Returns NCHW int8 (post-pool when ``pool`` is given)."""
+    interpret = default_interpret() if interpret is None else interpret
+    xh = jnp.transpose(x, (0, 2, 3, 1))          # NHWC
+    xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)))
+    wh = jnp.transpose(w, (2, 3, 1, 0))          # HWIO
+    y = _qconv.qconv2d(xh, wh, b, strides=strides, shift=shift, relu=relu,
+                       pool=pool, block_cout=block_cout, interpret=interpret)
+    return jnp.transpose(y, (0, 3, 1, 2))
+
+
+def maxpool2d_nchw(x: jnp.ndarray, window: int, stride: int,
+                   pads: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> jnp.ndarray:
+    """Standalone int8 max-pool (for pools not fused behind a conv)."""
+    xh = jnp.transpose(x, (0, 2, 3, 1))
+    if any(pads):
+        xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)),
+                     constant_values=ref.INT8_MIN)
+    y = ref.maxpool2d_ref(xh, window, stride)
+    return jnp.transpose(y, (0, 3, 1, 2))
+
+
+def avgpool2d_nchw(x: jnp.ndarray, window: int, stride: int,
+                   pads: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> jnp.ndarray:
+    """Standalone int8 average-pool (AveragePool / GlobalAveragePool)."""
+    xh = jnp.transpose(x, (0, 2, 3, 1))
+    if any(pads):
+        xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]),
+                          (pads[1], pads[3]), (0, 0)))
+    y = ref.avgpool2d_ref(xh, window, stride)
+    return jnp.transpose(y, (0, 3, 1, 2))
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def ssd_scan(x, dt, a, b, c, d=None, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, a, b, c, d, chunk=chunk, interpret=interpret)

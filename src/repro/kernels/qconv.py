@@ -1,0 +1,161 @@
+"""Fused int8 conv + ReLU + max-pool Pallas kernel — the flagship
+"pipelined kernel" of the paper (§3.2.3, Fig. 5), adapted to TPU.
+
+FPGA -> TPU adaptation (see DESIGN.md §2): the paper streams a
+line-buffer convolution through OpenCL pipes; the TPU-native equivalent
+keeps the conv -> ReLU -> requantize -> max-pool chain resident in VMEM
+inside ONE kernel (fusion = pipes: the intermediate feature map never
+round-trips through HBM) and expresses the convolution as kh*kw
+shifted int8 matmuls on the MXU (im2col-free sliced dot products).
+
+Parallelism parameters map exactly onto the paper's degrees of freedom:
+  * ``N_l`` (compute lanes)      -> ``block_cout`` (output-channel tile)
+  * ``N_i`` (input vector width) -> the Cin contraction width (whole Cin
+    per dot here; the DSE scores VMEM pressure of both).
+
+Grid: (batch, Cout/block_cout).  Each step loads the full (padded)
+input plane (int8 HxWxCin — e.g. 224x224x64 = 3.2 MiB, comfortably
+inside the ~16 MiB VMEM budget for every AlexNet/VGG layer) plus one
+weight tile (KH, KW, Cin, block_cout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _qconv_kernel(
+    x_ref,   # (1, Hp, Wp, Cin) int8 (pre-padded)
+    w_ref,   # (KH, KW, Cin, bco) int8
+    b_ref,   # (1, bco) int32
+    o_ref,   # (1, Ho', Wo', bco) int8 (post-pool if fused)
+    *,
+    strides: Tuple[int, int],
+    out_hw: Tuple[int, int],
+    shift: int,
+    relu: bool,
+    pool: Optional[Tuple[int, int]],
+):
+    x = x_ref[0]                      # (Hp, Wp, Cin)
+    kh, kw = w_ref.shape[0], w_ref.shape[1]
+    cin = x.shape[-1]
+    bco = o_ref.shape[-1]
+    ho, wo = out_hw
+    sh, sw = strides
+
+    acc = jnp.zeros((ho * wo, bco), jnp.int32)
+    for i in range(kh):              # static unroll: kh*kw MXU matmuls
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
+                (sh, sw, 1),
+            )                         # (ho, wo, cin) int8
+            acc += jnp.dot(
+                patch.reshape(ho * wo, cin),
+                w_ref[i, j],
+                preferred_element_type=jnp.int32,
+            )
+
+    acc = acc + b_ref[...].astype(jnp.int32)  # (1,bco) broadcasts
+    if shift > 0:
+        acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    y = jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8).reshape(ho, wo, bco)
+
+    if pool is not None:
+        pw, ps = pool
+        pho, pwo = (ho - pw) // ps + 1, (wo - pw) // ps + 1
+        pooled = jnp.full((pho, pwo, bco), INT8_MIN, jnp.int8)
+        for pi in range(pw):          # static unroll over the pool window
+            for pj in range(pw):
+                win = jax.lax.slice(
+                    y,
+                    (pi, pj, 0),
+                    (pi + (pho - 1) * ps + 1, pj + (pwo - 1) * ps + 1, bco),
+                    (ps, ps, 1),
+                )
+                pooled = jnp.maximum(pooled, win)
+        y = pooled
+
+    o_ref[0] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("strides", "shift", "relu", "pool", "block_cout", "interpret"),
+)
+def qconv2d(
+    x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
+    w: jnp.ndarray,  # (KH, KW, Cin, Cout) int8
+    b: Optional[jnp.ndarray],  # (Cout,) int32
+    *,
+    strides: Tuple[int, int] = (1, 1),
+    shift: int = 0,
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,
+    block_cout: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, hp, wp, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    sh, sw = strides
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    if b is None:
+        b = jnp.zeros((cout,), jnp.int32)
+
+    bco = min(block_cout, _rup(cout, 128))
+    coutp = _rup(cout, bco)
+    wpad = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
+    bpad = jnp.pad(b, (0, coutp - cout)).reshape(1, coutp)
+
+    if pool is not None:
+        pwin, pstr = pool
+        oh, ow = (ho - pwin) // pstr + 1, (wo - pwin) // pstr + 1
+    else:
+        oh, ow = ho, wo
+
+    out = pl.pallas_call(
+        functools.partial(
+            _qconv_kernel,
+            strides=strides,
+            out_hw=(ho, wo),
+            shift=shift,
+            relu=relu,
+            pool=pool,
+        ),
+        grid=(n, coutp // bco),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda ni, co: (ni, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, bco), lambda ni, co: (0, 0, 0, co)),
+            pl.BlockSpec((1, bco), lambda ni, co: (0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, bco), lambda ni, co: (ni, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, coutp), jnp.int8),
+        interpret=interpret,
+    )(x, wpad, bpad)
+    return out[..., :cout]
+
+
+def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
+               ho: int, wo: int) -> int:
+    """Working-set estimate used by the DSE resource model: input plane +
+    weight tile + int32 accumulator + output tile."""
+    return (hp * wp * cin            # x int8
+            + kh * kw * cin * bco    # w int8
+            + 4 * ho * wo * bco      # acc int32
+            + ho * wo * bco)         # y int8
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,0 +1,90 @@
+"""int8 GEMM + bias + requantize Pallas kernel (the paper's fused
+conv/fully-connected matrix unit, §3.2.3: "convolution kernel and the
+fully connected kernel can be fused together as a single 3-D
+matrix-matrix multiplication unit").
+
+TPU mapping: int8 operands feed the MXU with int32 accumulation; block
+shapes default to (128, 128, 128) tiles — multiples of the (32, 128)
+int8 native tile — and the DSE's ``N_i``/``N_l`` map to the contraction
+and output tile widths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _qgemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+                  shift: int, relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.int32)
+        if shift > 0:
+            acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
+        if relu:
+            acc = jnp.maximum(acc, 0)
+        o_ref[...] = jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shift", "relu", "block_m", "block_n", "block_k", "interpret"),
+)
+def qgemm(
+    x: jnp.ndarray,  # (M, K) int8
+    w: jnp.ndarray,  # (K, N) int8
+    b: Optional[jnp.ndarray],  # (N,) int32 or None
+    *,
+    shift: int,
+    relu: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked int8 GEMM; shapes need not divide blocks (zero padding is
+    applied and sliced off — zero is the symmetric quantization zero)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((n,), jnp.int32)
+    bm, bn, bk = min(block_m, _rup(m, 8)), min(block_n, _rup(n, 128)), min(block_k, _rup(k, 128))
+    mp, np_, kp = _rup(m, bm), _rup(n, bn), _rup(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_qgemm_kernel, k_steps=k_steps, shift=shift, relu=relu),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,0 +1,156 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *exact* semantics the kernels must reproduce
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and assert_allclose
+against these).  All integer arithmetic follows the paper's fixed-point
+rules: int8 operands, int32 accumulation, round-half-up arithmetic
+right-shift requantization (shift = m_w + m_x - m_y), fused ReLU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def requant(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
+    """int32 accumulator -> int8: round-half-up shift, relu, clip."""
+    if shift > 0:
+        acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def qgemm_ref(
+    x: jnp.ndarray,  # (M, K) int8
+    w: jnp.ndarray,  # (K, N) int8
+    b: Optional[jnp.ndarray],  # (N,) int32
+    shift: int,
+    relu: bool = False,
+) -> jnp.ndarray:
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    if b is not None:
+        acc = acc + b.astype(jnp.int32)[None, :]
+    return requant(acc, shift, relu)
+
+
+def qconv2d_ref(
+    x: jnp.ndarray,  # (N, H, W, Cin) int8, already zero-padded
+    w: jnp.ndarray,  # (KH, KW, Cin, Cout) int8
+    b: Optional[jnp.ndarray],  # (Cout,) int32
+    strides: Tuple[int, int],
+    shift: int,
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,  # (window, stride)
+) -> jnp.ndarray:
+    """Fused conv+ReLU+maxpool, NHWC/HWIO, VALID padding (pad upstream)."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=strides,
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        acc = acc + b.astype(jnp.int32)[None, None, None, :]
+    y = requant(acc, shift, relu)
+    if pool is not None:
+        pw, ps = pool
+        y = jax.lax.reduce_window(
+            y, jnp.int8(INT8_MIN), jax.lax.max,
+            (1, pw, pw, 1), (1, ps, ps, 1), "VALID")
+    return y
+
+
+def maxpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """Standalone int8 NHWC max-pool."""
+    return jax.lax.reduce_window(
+        x, jnp.int8(INT8_MIN), jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
+def avgpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """Standalone int8 NHWC average-pool: int32 sum, round-half-up
+    divide (fixed-point semantics — the scale is unchanged)."""
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    count = window * window
+    q = jnp.floor_divide(summed + count // 2, count)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, HKV, Skv, D)
+    v: jnp.ndarray,  # (B, HKV, Skv, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-query attention oracle.  ``q_offset`` is the absolute
+    position of q[0] (for decode/prefill continuation).  ``window`` is a
+    sliding-attention span: key j visible to query i iff i-window < j <= i.
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray,   # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)  -- positive (post-softplus)
+    a: jnp.ndarray,   # (H,)       -- negative
+    b: jnp.ndarray,   # (B, L, G, N)
+    c: jnp.ndarray,   # (B, L, G, N)
+    d: Optional[jnp.ndarray] = None,  # (H,) skip connection
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential state-space-duality oracle (Mamba-2 §SSD):
+        S_t = exp(dt_t a) S_{t-1} + dt_t x_t B_t^T ;  y_t = S_t C_t + D x_t
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    B_, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    g = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b.astype(jnp.float32), g, axis=2)  # (B,L,H,N)
+    cf = jnp.repeat(c.astype(jnp.float32), g, axis=2)
+
+    def step(s, t):
+        decay = jnp.exp(dtf[:, t] * a[None, :])  # (B,H)
+        contrib = jnp.einsum("bh,bhp,bhn->bhpn", dtf[:, t], xf[:, t], bf[:, t])
+        s = decay[..., None, None] * s + contrib
+        y = jnp.einsum("bhpn,bhn->bhp", s, cf[:, t])
+        return s, y
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B_, H, P, N), jnp.float32))
+    s_fin, ys = jax.lax.scan(step, s0, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,L,H,P)
+    if d is not None:
+        y = y + d[None, None, :, None] * xf
+    return y.astype(x.dtype), s_fin

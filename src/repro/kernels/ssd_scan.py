@@ -1,0 +1,129 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+The SSD decomposition [arXiv:2405.21060] splits the linear recurrence
+    S_t = exp(dt_t a) S_{t-1} + dt_t x_t B_t^T ;   y_t = S_t C_t + D x_t
+into Q-length chunks: inside a chunk the output is an attention-like
+masked (C B^T) matmul (MXU work); across chunks a small (P, N) state is
+carried.  Grid: (batch*heads, n_chunks) with the chunk axis innermost —
+the carried state lives in VMEM scratch across chunk iterations, exactly
+the "deeply pipelined" structure the paper builds with OpenCL pipes
+(DESIGN.md §2: fusion/scratch-carry is the TPU analogue of a FIFO).
+
+Validated in interpret mode against ``ref.ssd_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref,    # (1, Q, P)
+                dt_ref,   # (1, Q)
+                a_ref,    # (1, 1)
+                b_ref,    # (1, Q, N)
+                c_ref,    # (1, Q, N)
+                d_ref,    # (1, 1)
+                y_ref,    # (1, Q, P)
+                s_ref,    # scratch (P, N) f32
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)       # scalar
+    bmat = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    logdec = jnp.cumsum(dt * a)               # (Q,)  L_t
+    # intra-chunk: scores[t, s] = exp(L_t - L_s) * dt_s  for s <= t
+    diff = logdec[:, None] - logdec[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diff = jnp.where(tri, diff, 0.0)          # mask before exp (overflow)
+    gmat = jnp.where(tri, jnp.exp(diff) * dt[None, :], 0.0)
+    scores = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32) * gmat
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: carried state contribution
+    s_prev = s_ref[...]                       # (P, N)
+    y += jnp.exp(logdec)[:, None] * jnp.dot(
+        cmat, s_prev.T, preferred_element_type=jnp.float32)
+
+    # state update: S = exp(L_Q) S_prev + sum_s exp(L_Q - L_s) dt_s x_s B_s^T
+    tail = jnp.exp(logdec[-1] - logdec) * dt  # (Q,)
+    s_new = jnp.exp(logdec[-1]) * s_prev + jnp.dot(
+        x.T, bmat * tail[:, None], preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    y += d_ref[0, 0].astype(jnp.float32) * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,   # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H) positive
+    a: jnp.ndarray,   # (H,) negative
+    b: jnp.ndarray,   # (B, L, G, N)
+    c: jnp.ndarray,   # (B, L, G, N)
+    d: Optional[jnp.ndarray] = None,  # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Chunked SSD forward; L must be a chunk multiple (wrapper pads)."""
+    B_, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    group = H // G
+    q = min(chunk, L)
+    lp = _rup(L, q)
+    if lp != L:
+        x = jnp.pad(x, ((0, 0), (0, lp - L), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, lp - L), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, lp - L), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, lp - L), (0, 0), (0, 0)))
+    if d is None:
+        d = jnp.zeros((H,), jnp.float32)
+
+    # (B, H, L, ...) layouts so the grid axis is leading
+    xt = x.transpose(0, 2, 1, 3).reshape(B_ * H, lp, P)
+    dtt = dt.transpose(0, 2, 1).reshape(B_ * H, lp)
+    bt = b.transpose(0, 2, 1, 3).reshape(B_ * G, lp, N)
+    ct = c.transpose(0, 2, 1, 3).reshape(B_ * G, lp, N)
+    av = jnp.asarray(a, jnp.float32).reshape(H, 1)
+    dv = jnp.asarray(d, jnp.float32).reshape(H, 1)
+
+    def bc_index(bh, ci):
+        return ((bh // H) * G + (bh % H) // group, ci, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=q),
+        grid=(B_ * H, lp // q),
+        in_specs=[
+            pl.BlockSpec((1, q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh % H, 0)),
+            pl.BlockSpec((1, q, N), bc_index),
+            pl.BlockSpec((1, q, N), bc_index),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh % H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B_ * H, lp, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, av, bt, ct, dv)
+    y = out.reshape(B_, H, lp, P).transpose(0, 2, 1, 3)
+    return y[:, :L]
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

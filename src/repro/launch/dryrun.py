@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-compile every (arch × shape × mesh) cell.
+
+For each cell:  jit(step).lower(**input_specs).compile()  against the
+production mesh — proving the sharding config is coherent (no mismatch,
+no compile-OOM, collectives legal), then record memory_analysis /
+cost_analysis / parsed-collective roofline terms to JSON for
+EXPERIMENTS.md and the benchmarks.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single --out results/dryrun.json
+
+The XLA_FLAGS line above MUST precede any jax import (device count
+locks at first init); smoke tests / benches never import this module.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, roofline
+from repro.configs.base import ALL_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import OptimizerConfig, make_train_step
+from repro.sharding import PolicyOptions, ShardingPolicy
+
+
+def _spec_train_state(model: Model, policy: ShardingPolicy):
+    """Shape-only train state + shardings (no allocation)."""
+    opt_cfg = OptimizerConfig()
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = policy.param_specs(params_shape)
+
+    def opt_like(ps, sh):
+        return jax.tree.map(
+            lambda spec, leaf: policy.optimizer_spec(spec, leaf.shape),
+            ps, sh, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    master32 = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), params_shape)
+    state_shape = {
+        "params": params_shape,
+        "opt": {"master": master32, "mu": master32, "nu": master32},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    ospec = opt_like(pspecs, params_shape)
+    state_spec = {
+        "params": pspecs,
+        "opt": {"master": ospec, "mu": ospec, "nu": ospec},
+        "step": jax.sharding.PartitionSpec(),
+    }
+    return state_shape, state_spec, opt_cfg
+
+
+def _compile_step(cfg, shape, mesh, options, batch_override=None):
+    """Lower + compile one program for a given config (any depth)."""
+    policy = ShardingPolicy(mesh, cfg, options)
+    model = Model(cfg, remat=options.remat, policy=policy)
+    specs = model.input_specs(shape, batch_override=batch_override)
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_shape, state_spec, opt_cfg = _spec_train_state(model, policy)
+            grad_spec = (state_spec["opt"]["mu"] if options.zero2_grads
+                         else None)
+            step_fn = make_train_step(model, opt_cfg,
+                                      n_micro=options.n_micro,
+                                      grad_spec=grad_spec)
+            batch_specs = policy.batch_specs(specs, shape)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_spec, batch_specs),
+                donate_argnums=(0,),
+            ).lower(state_shape, specs)
+        elif shape.kind == "prefill":
+            params_shape = jax.eval_shape(
+                lambda: model.init(jax.random.key(0)))
+            pspecs = policy.param_specs(params_shape)
+            batch_specs = policy.batch_specs(specs, shape)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, cache_len=shape.seq_len)
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(pspecs, batch_specs),
+            ).lower(params_shape, specs)
+        else:  # decode
+            params_shape = jax.eval_shape(
+                lambda: model.init(jax.random.key(0)))
+            pspecs = policy.param_specs(params_shape)
+            cache_shape = specs.pop("cache")
+            batch_specs = policy.batch_specs(
+                dict(specs, cache=cache_shape), shape)
+            cache_specs = batch_specs.pop("cache")
+
+            def decode_fn(params, batch, cache):
+                return model.decode_step(params, batch, cache)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(pspecs, batch_specs, cache_specs),
+                donate_argnums=(2,),
+            ).lower(params_shape, specs, cache_shape)
+    return lowered.compile()
+
+
+def _depth_cfg(cfg, k: int):
+    """Reduced-depth variant with identical width/shapes, and the scale
+    factor back to full depth."""
+    import dataclasses
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every or cfg.n_layers
+        return (dataclasses.replace(cfg, n_layers=every * k,
+                                    scan_unroll=True),
+                cfg.n_layers // every)
+    if cfg.family == "encdec":
+        assert cfg.encoder_layers == cfg.n_layers
+        return (dataclasses.replace(cfg, n_layers=k, encoder_layers=k,
+                                    scan_unroll=True), cfg.n_layers)
+    return dataclasses.replace(cfg, n_layers=k, scan_unroll=True), cfg.n_layers
+
+
+def _costs(compiled, exclude_trailing=None) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    stats = roofline.parse_collectives(text)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "ess": roofline.essential_bytes(text, exclude_trailing),
+        "coll": stats.total_bytes,
+        "counts": stats.counts,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               options: Optional[PolicyOptions] = None,
+               batch_override: Optional[int] = None,
+               extrapolate: bool = True,
+               cfg_override: Optional[Dict[str, Any]] = None,
+               flash_accounting: bool = False):
+    """Compile one cell; returns (compiled, meta dict).
+
+    The full-depth program is compiled with depth *scans* (fast, proves
+    the sharding and gives memory_analysis).  XLA cost_analysis counts
+    while bodies ONCE (verified empirically), so FLOPs/bytes/collective
+    bytes are recovered exactly by a two-point depth extrapolation:
+    compile depth-1 and depth-2 variants fully *unrolled* (cheap) and
+    solve  cost(L) = outside + L * per_layer.
+
+    ``cfg_override``: ModelConfig field replacements (perf iterations).
+    ``flash_accounting``: exclude (seq, chunk)-shaped score/probability
+    tensors from the fused-memory bound — with the validated Pallas
+    flash kernel those stay in VMEM and never round-trip HBM.
+    """
+    import dataclasses as _dc
+    cfg = configs.get(arch)
+    if cfg_override:
+        cfg = _dc.replace(cfg, **cfg_override)
+    shape = ALL_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    options = options or PolicyOptions()
+    chips = mesh.devices.size
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+
+    exclude = None
+    if flash_accounting:
+        exclude = set()
+        if cfg.attention_impl == "chunked":
+            # attention score/probability tensors stay in VMEM inside
+            # kernels/flash_attention.py
+            sq = shape.seq_len if shape.kind != "decode" else 1
+            exclude.add((sq, cfg.attention_chunk))
+        if cfg.family in ("ssm", "hybrid"):
+            # intra-chunk SSD score tensors stay in VMEM inside
+            # kernels/ssd_scan.py
+            exclude.add((cfg.ssm_chunk, cfg.ssm_chunk))
+        exclude = exclude or None
+
+    t0 = time.perf_counter()
+    compiled = _compile_step(cfg, shape, mesh, options, batch_override)
+    t_compile = time.perf_counter() - t0
+
+    if extrapolate:
+        cfg1, scale = _depth_cfg(cfg, 1)
+        cfg2, _ = _depth_cfg(cfg, 2)
+        c1 = _costs(_compile_step(cfg1, shape, mesh, options,
+                                  batch_override), exclude)
+        c2 = _costs(_compile_step(cfg2, shape, mesh, options,
+                                  batch_override), exclude)
+        def ext(key):
+            return max(0.0, max(0.0, 2 * c1[key] - c2[key])
+                       + scale * (c2[key] - c1[key]))
+
+        flops, bytes_, ess, coll = (ext("flops"), ext("bytes"), ext("ess"),
+                                    ext("coll"))
+        counts = {
+            k: int(max(0, 2 * c1["counts"].get(k, 0) - c2["counts"].get(k, 0))
+                   + scale * (c2["counts"].get(k, 0) - c1["counts"].get(k, 0)))
+            for k in set(c1["counts"]) | set(c2["counts"])}
+    else:
+        c = _costs(compiled, exclude)
+        flops, bytes_, ess, coll, counts = (c["flops"], c["bytes"], c["ess"],
+                                            c["coll"], c["counts"])
+
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes)
+    except Exception:
+        ma, peak = None, 0.0
+
+    # essential traffic: heavy-op bytes + entry args/outputs once
+    ess_total = ess + (float(ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes) if ma else 0.0)
+    rep = roofline.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops, bytes_per_dev=bytes_,
+        collective_bytes_per_dev=coll,
+        t_compute=flops / roofline.PEAK_FLOPS,
+        t_memory=bytes_ / roofline.HBM_BW,
+        t_collective=coll / (roofline.ICI_LINKS * roofline.ICI_LINK_BW),
+        model_flops=roofline.model_flops_for(cfg, shape),
+        peak_bytes_per_dev=peak,
+        collective_counts={k: v for k, v in counts.items() if v},
+        essential_bytes_per_dev=ess_total,
+        t_memory_fused=ess_total / roofline.HBM_BW,
+    )
+    meta = rep.to_dict()
+    meta.update(compile_s=round(t_compile, 2))
+    if ma is not None:
+        meta.update(arg_bytes=int(ma.argument_size_in_bytes),
+                    out_bytes=int(ma.output_size_in_bytes),
+                    temp_bytes=int(ma.temp_size_in_bytes))
+    return compiled, meta
+
+
+def cells(archs, shapes):
+    for arch in archs:
+        for shape in shapes:
+            if configs.supports_shape(arch, shape):
+                yield arch, shape
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(ALL_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    options = PolicyOptions(remat=args.remat,
+                            seq_shard_decode=not args.no_seq_shard)
+
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    failures = []
+    for arch, shape in cells(archs, shapes):
+        for multi in meshes:
+            key = f"{arch}|{shape}|{'multi_pod' if multi else 'single_pod'}"
+            print(f"=== {key} ===", flush=True)
+            try:
+                # roofline extrapolation on the single-pod mesh only; the
+                # multi-pod pass is the sharding-coherence proof
+                compiled, meta = lower_cell(arch, shape, multi_pod=multi,
+                                            options=options,
+                                            extrapolate=not multi)
+                results[key] = meta
+                print(json.dumps(
+                    {k: meta[k] for k in
+                     ("t_compute", "t_memory", "t_memory_fused",
+                      "t_collective", "dominant", "roofline_fraction",
+                      "compile_s")},
+                    default=float), flush=True)
+                if args.print_hlo:
+                    print(compiled.as_text()[:4000])
+                del compiled
+            except Exception as e:  # noqa: BLE001 - record and continue
+                failures.append((key, repr(e)))
+                traceback.print_exc()
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=float)
+    print(f"\n{len(results)} cells recorded -> {args.out}")
+    if failures:
+        print("FAILURES:")
+        for k, e in failures:
+            print(" ", k, e)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

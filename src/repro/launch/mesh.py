@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; the multi-pod mesh adds a leading
+    'pod' axis (2 pods = 512 chips).  'pod' is an outer data-parallel
+    axis: scaling to N pods only grows this axis (elastic by
+    construction — see DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,154 @@
+"""Batched serving driver: continuous-batching decode loop.
+
+A fixed pool of sequence slots; finished sequences release their slot
+and queued requests claim it (their prompt is prefilled into the slot's
+cache region).  Per-slot lengths drive the masked decode attention, so
+heterogeneous sequence lengths coexist in one batch — the standard
+continuous-batching pattern, expressed functionally.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --preset smoke --slots 4 --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.sharding import PolicyOptions, ShardingPolicy
+
+
+class Request:
+    def __init__(self, rid: int, prompt: np.ndarray, max_new: int):
+        self.rid = rid
+        self.prompt = prompt
+        self.max_new = max_new
+        self.output: List[int] = []
+        self.done = False
+
+
+class Server:
+    """Slot-based continuous batching engine."""
+
+    def __init__(self, model: Model, params, slots: int, cache_len: int):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.cache = model.init_cache(slots, cache_len)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                # prefill the prompt into this slot, token by token via
+                # decode steps (single-slot prefill keeps the example
+                # simple; model.prefill covers the bulk path)
+                self.lengths[s] = 0
+                for tok in req.prompt[:-1]:
+                    self._step_slot(s, int(tok))
+                req.pending_token = int(req.prompt[-1])
+
+    def _step_slot(self, s: int, token: int) -> int:
+        """Advance a single slot by one token (batched with idle slots)."""
+        tokens = np.zeros((self.slots, 1), np.int32)
+        tokens[s, 0] = token
+        logits, self.cache = self._decode(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "lengths": jnp.asarray(self.lengths)},
+            self.cache)
+        self.lengths[s] += 1
+        return int(np.asarray(logits[s, -1]).argmax())
+
+    def step(self) -> None:
+        """One decode step across all active slots (true batching)."""
+        self._admit()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        active = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tokens[s, 0] = (req.pending_token if req.output == []
+                            else req.output[-1])
+            active.append(s)
+        if not active:
+            return
+        logits, self.cache = self._decode(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "lengths": jnp.asarray(self.lengths)},
+            self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            self.lengths[s] += 1
+            req.output.append(int(nxt[s]))
+            if (len(req.output) >= req.max_new
+                    or self.lengths[s] >= self.cache_len - 1):
+                req.done = True
+                self.slot_req[s] = None
+                self.lengths[s] = 0
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke(args.arch) if args.preset == "smoke"
+           else configs.get(args.arch))
+    mesh = make_host_mesh()
+    policy = ShardingPolicy(mesh, cfg, PolicyOptions(seq_shard_decode=False))
+    model = Model(cfg, policy=policy)
+    rng = np.random.default_rng(args.seed)
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.key(args.seed))
+        server = Server(model, params, args.slots, args.cache_len)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
+                        args.max_new) for i in range(args.requests)]
+        for r in reqs:
+            server.submit(r)
+        t0 = time.perf_counter()
+        steps = 0
+        while server.busy:
+            server.step()
+            steps += 1
+            if steps > args.requests * (args.prompt_len + args.max_new) + 64:
+                raise RuntimeError("serving loop did not converge")
+        dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {steps} engine steps)")
+    assert all(r.done for r in reqs)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

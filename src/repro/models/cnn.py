@@ -1,0 +1,271 @@
+"""CNN model zoo expressed in the ONNX-lite transport format.
+
+Builders emit exactly the graphs a framework exporter would (ONNX op
+names, NCHW, initializers as numpy arrays), so the front-end parser is
+exercised the same way it would be on a real ONNX file.  AlexNet and
+VGG-16 match the paper's workloads (Tables 1–4).  A float JAX executor
+(``run_float``) serves as the accuracy oracle for the int8 pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, Node, TensorInfo
+from repro.core import onnx_lite
+
+
+class GraphBuilder:
+    """Tiny builder DSL ("the ML framework" whose export we parse)."""
+
+    def __init__(self, name: str, input_shape: Sequence[int], seed: int = 0):
+        self.name = name
+        self.nodes: List[Node] = []
+        self.inits: Dict[str, np.ndarray] = {}
+        self.rng = np.random.default_rng(seed)
+        self.input = TensorInfo("input", tuple(input_shape))
+        self.cur = "input"
+        self.cur_shape: Tuple[int, ...] = tuple(input_shape)
+        self._n = 0
+
+    def _name(self, op: str) -> str:
+        self._n += 1
+        return f"{op.lower()}_{self._n}"
+
+    def conv(self, c_out: int, k: int, stride: int = 1, pad: int = 0,
+             relu: bool = True) -> "GraphBuilder":
+        name = self._name("Conv")
+        c_in = self.cur_shape[1]
+        w = (self.rng.standard_normal((c_out, c_in, k, k)) *
+             np.sqrt(2.0 / (c_in * k * k))).astype(np.float32)
+        b = (self.rng.standard_normal(c_out) * 0.01).astype(np.float32)
+        self.inits[name + "_w"] = w
+        self.inits[name + "_b"] = b
+        out = name + "_out"
+        self.nodes.append(Node(
+            "Conv", name, [self.cur, name + "_w", name + "_b"], [out],
+            {"kernel_shape": [k, k], "strides": [stride, stride],
+             "pads": [pad, pad, pad, pad], "dilations": [1, 1]}))
+        self.cur = out
+        h = (self.cur_shape[2] + 2 * pad - k) // stride + 1
+        w_ = (self.cur_shape[3] + 2 * pad - k) // stride + 1
+        self.cur_shape = (self.cur_shape[0], c_out, h, w_)
+        if relu:
+            self.relu()
+        return self
+
+    def relu(self) -> "GraphBuilder":
+        name = self._name("Relu")
+        out = name + "_out"
+        self.nodes.append(Node("Relu", name, [self.cur], [out]))
+        self.cur = out
+        return self
+
+    def maxpool(self, k: int, stride: Optional[int] = None) -> "GraphBuilder":
+        stride = stride or k
+        name = self._name("MaxPool")
+        out = name + "_out"
+        self.nodes.append(Node(
+            "MaxPool", name, [self.cur], [out],
+            {"kernel_shape": [k, k], "strides": [stride, stride],
+             "pads": [0, 0, 0, 0]}))
+        self.cur = out
+        n, c, h, w = self.cur_shape
+        self.cur_shape = (n, c, (h - k) // stride + 1, (w - k) // stride + 1)
+        return self
+
+    def avgpool(self, k: int, stride: Optional[int] = None) -> "GraphBuilder":
+        stride = stride or k
+        name = self._name("AveragePool")
+        out = name + "_out"
+        self.nodes.append(Node(
+            "AveragePool", name, [self.cur], [out],
+            {"kernel_shape": [k, k], "strides": [stride, stride],
+             "pads": [0, 0, 0, 0]}))
+        self.cur = out
+        n, c, h, w = self.cur_shape
+        self.cur_shape = (n, c, (h - k) // stride + 1, (w - k) // stride + 1)
+        return self
+
+    def global_avgpool(self) -> "GraphBuilder":
+        name = self._name("GlobalAveragePool")
+        out = name + "_out"
+        self.nodes.append(Node("GlobalAveragePool", name, [self.cur], [out]))
+        self.cur = out
+        n, c, _h, _w = self.cur_shape
+        self.cur_shape = (n, c, 1, 1)
+        return self
+
+    def flatten(self) -> "GraphBuilder":
+        name = self._name("Flatten")
+        out = name + "_out"
+        self.nodes.append(Node("Flatten", name, [self.cur], [out], {"axis": 1}))
+        self.cur = out
+        n = self.cur_shape[0]
+        self.cur_shape = (n, int(np.prod(self.cur_shape[1:])))
+        return self
+
+    def fc(self, n_out: int, relu: bool = True, softmax: bool = False) -> "GraphBuilder":
+        if len(self.cur_shape) != 2:
+            self.flatten()
+        name = self._name("Gemm")
+        k = self.cur_shape[1]
+        w = (self.rng.standard_normal((k, n_out)) * np.sqrt(2.0 / k)).astype(np.float32)
+        b = (self.rng.standard_normal(n_out) * 0.01).astype(np.float32)
+        self.inits[name + "_w"] = w
+        self.inits[name + "_b"] = b
+        out = name + "_out"
+        self.nodes.append(Node("Gemm", name, [self.cur, name + "_w", name + "_b"],
+                               [out], {"transA": 0, "transB": 0}))
+        self.cur = out
+        self.cur_shape = (self.cur_shape[0], n_out)
+        if relu:
+            self.relu()
+        if softmax:
+            name = self._name("Softmax")
+            out = name + "_out"
+            self.nodes.append(Node("Softmax", name, [self.cur], [out], {"axis": 1}))
+            self.cur = out
+        return self
+
+    def build(self) -> Graph:
+        return Graph(self.name, self.nodes, [self.input], [self.cur], self.inits)
+
+
+def alexnet(batch: int = 1, num_classes: int = 1000, seed: int = 0,
+            channels_base: int = 64) -> Graph:
+    """AlexNet [36] (single-tower variant, as in torchvision / PipeCNN).
+
+    Five conv layers (1,2,5 followed by 3x3/2 max-pool) + three FC —
+    the paper's Fig. 6 structure: 5 fused conv/pool stages + 3 FC stages.
+    """
+    cb = channels_base
+    b = GraphBuilder("alexnet", (batch, 3, 224, 224), seed)
+    b.conv(cb, 11, stride=4, pad=2).maxpool(3, 2)
+    b.conv(cb * 3, 5, pad=2).maxpool(3, 2)
+    b.conv(cb * 6, 3, pad=1)
+    b.conv(cb * 4, 3, pad=1)
+    b.conv(cb * 4, 3, pad=1).maxpool(3, 2)
+    b.fc(4096).fc(4096).fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def vgg16(batch: int = 1, num_classes: int = 1000, seed: int = 0) -> Graph:
+    """VGG-16 [37]: 13 conv (5 pool stages) + 3 FC."""
+    b = GraphBuilder("vgg16", (batch, 3, 224, 224), seed)
+    for c, reps in ((64, 2), (128, 2), (256, 3), (512, 3), (512, 3)):
+        for _ in range(reps):
+            b.conv(c, 3, pad=1)
+        b.maxpool(2, 2)
+    b.fc(4096).fc(4096).fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def tiny_cnn(batch: int = 1, num_classes: int = 10, seed: int = 0,
+             in_hw: int = 32) -> Graph:
+    """A small CIFAR-scale CNN for fast tests/examples."""
+    b = GraphBuilder("tiny_cnn", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, pad=1).maxpool(2, 2)
+    b.conv(32, 3, pad=1).maxpool(2, 2)
+    b.fc(64).fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def tiny_cnn_gap(batch: int = 1, num_classes: int = 10, seed: int = 0,
+                 in_hw: int = 32) -> Graph:
+    """Variant with average-pool + global-average-pool head (exercises
+    the standalone avg-pool pipeline stages)."""
+    b = GraphBuilder("tiny_cnn_gap", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, pad=1).avgpool(2, 2)
+    b.conv(32, 3, pad=1).global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+# ---------------------------------------------------------------------
+# Float oracle: run the graph directly with lax ops (NCHW).
+# ---------------------------------------------------------------------
+
+def run_float(graph: Graph, x: jnp.ndarray, return_env: bool = False):
+    """Execute the ONNX-lite graph in float32 — the emulation-mode
+    accuracy oracle against which the int8 pipeline is validated."""
+    env: Dict[str, jnp.ndarray] = {graph.inputs[0].name: x}
+    for k, v in graph.initializers.items():
+        env[k] = jnp.asarray(v)
+    for n in graph.nodes:
+        if n.op_type == "Conv":
+            xin, w = env[n.inputs[0]], env[n.inputs[1]]
+            pads = n.attr("pads", [0, 0, 0, 0])
+            out = jax.lax.conv_general_dilated(
+                xin, w,
+                window_strides=tuple(n.attr("strides", [1, 1])),
+                padding=((pads[0], pads[2]), (pads[1], pads[3])),
+                rhs_dilation=tuple(n.attr("dilations", [1, 1])),
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                feature_group_count=int(n.attr("group", 1)),
+            )
+            if len(n.inputs) > 2:
+                out = out + env[n.inputs[2]][None, :, None, None]
+            env[n.outputs[0]] = out
+        elif n.op_type == "MaxPool":
+            xin = env[n.inputs[0]]
+            k = n.attr("kernel_shape")
+            s = n.attr("strides", k)
+            p = n.attr("pads", [0, 0, 0, 0])
+            env[n.outputs[0]] = jax.lax.reduce_window(
+                xin, -jnp.inf, jax.lax.max,
+                (1, 1, k[0], k[1]), (1, 1, s[0], s[1]),
+                ((0, 0), (0, 0), (p[0], p[2]), (p[1], p[3])))
+        elif n.op_type in ("AveragePool", "GlobalAveragePool"):
+            xin = env[n.inputs[0]]
+            if n.op_type == "GlobalAveragePool":
+                env[n.outputs[0]] = jnp.mean(xin, axis=(2, 3), keepdims=True)
+            else:
+                k = n.attr("kernel_shape")
+                s = n.attr("strides", k)
+                summed = jax.lax.reduce_window(
+                    xin, 0.0, jax.lax.add, (1, 1, k[0], k[1]),
+                    (1, 1, s[0], s[1]), "VALID")
+                env[n.outputs[0]] = summed / (k[0] * k[1])
+        elif n.op_type == "Relu":
+            env[n.outputs[0]] = jax.nn.relu(env[n.inputs[0]])
+        elif n.op_type == "Softmax":
+            env[n.outputs[0]] = jax.nn.softmax(env[n.inputs[0]], axis=int(n.attr("axis", -1)))
+        elif n.op_type == "Gemm":
+            a, w = env[n.inputs[0]], env[n.inputs[1]]
+            if int(n.attr("transA", 0)):
+                a = a.T
+            if int(n.attr("transB", 0)):
+                w = w.T
+            out = a @ w
+            if len(n.inputs) > 2:
+                out = out + env[n.inputs[2]]
+            env[n.outputs[0]] = out
+        elif n.op_type == "MatMul":
+            env[n.outputs[0]] = env[n.inputs[0]] @ env[n.inputs[1]]
+        elif n.op_type == "Flatten":
+            xin = env[n.inputs[0]]
+            axis = int(n.attr("axis", 1))
+            lead = int(np.prod(xin.shape[:axis])) if axis else 1
+            env[n.outputs[0]] = xin.reshape(lead, -1)
+        elif n.op_type == "Reshape":
+            target = n.attr("shape") or env[n.inputs[1]].tolist()
+            env[n.outputs[0]] = env[n.inputs[0]].reshape([int(t) for t in target])
+        elif n.op_type == "Add":
+            env[n.outputs[0]] = env[n.inputs[0]] + env[n.inputs[1]]
+        elif n.op_type in ("Dropout", "Identity"):
+            env[n.outputs[0]] = env[n.inputs[0]]
+        else:
+            raise NotImplementedError(n.op_type)
+    if return_env:
+        return env
+    return env[graph.outputs[0]]
+
+
+def collect_activations(graph: Graph, x: np.ndarray) -> Dict[str, np.ndarray]:
+    """Run float and keep every intermediate (for PTQ calibration)."""
+    env = run_float(graph, jnp.asarray(x), return_env=True)
+    return {k: np.asarray(v) for k, v in env.items()}

@@ -1,0 +1,331 @@
+"""Transformer building blocks shared across the architecture fleet.
+
+Everything is expressed as pure functions over param pytrees (dict
+leaves) so stacks can be ``lax.scan``-ed over stacked per-layer params —
+essential to keep HLO size O(1) in depth for the 64-layer dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ norms
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm_type == "layer":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layer":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ------------------------------------------------------------------- rope
+
+def rope_frequencies(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int] = (2, 3, 3)) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): positions (3, B, S) carry (temporal,
+    height, width) ids; the D/2 frequency channels are split into three
+    sections (proportions per the qwen2-vl mrope_section) and each section
+    rotates by its own position component."""
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    bounds = [half * sections[0] // total,
+              half * (sections[0] + sections[1]) // total]
+    freqs = rope_frequencies(hd, theta)                       # (D/2,)
+    section_id = jnp.zeros((half,), jnp.int32)
+    section_id = section_id.at[bounds[0]:bounds[1]].set(1)
+    section_id = section_id.at[bounds[1]:].set(2)
+    # pos-per-channel: (B, S, D/2) — each channel rotates by the position
+    # component of its section
+    pos = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)[..., section_id]
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      *, causal: bool, window: Optional[int],
+                      q_offset: int, chunk: int,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks.  Pure JAX (lowers on
+    every backend) with O(Sq * chunk) score memory — this is the impl the
+    32k-prefill dry-runs use; the Pallas flash kernel is the TPU fast
+    path with identical math."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    scale = d ** -0.5
+    nchunks = -(-skv // chunk)
+    pad = nchunks * chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kp.reshape(b, hkv, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(b, hkv, nchunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, kci, vci = xs
+        kr = jnp.repeat(kci, g, axis=1).astype(jnp.float32)
+        vr = jnp.repeat(vci, g, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr) * scale
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < skv
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, h, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, h, sq, 1), jnp.float32),
+            jnp.zeros((b, h, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nchunks), kc, vc), unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal, window, q_offset):
+    return ops.ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+
+
+def run_attention(cfg: ModelConfig, q, k, v, *, causal: bool = True,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Dispatch on cfg.attention_impl.  Shapes: q (B,H,Sq,D), kv (B,HKV,Skv,D)."""
+    window = cfg.sliding_window
+    if cfg.attention_impl == "flash":
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    if cfg.attention_impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, chunk=cfg.attention_chunk,
+                                 unroll=cfg.scan_unroll)
+    return naive_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token decode: q (B,H,1,D) over cache (B,HKV,S,D) with valid
+    ``lengths`` (B,) — one masked GQA matmul pair (memory-bound)."""
+    b, h, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k_cache.shape[2])[None, :]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > (lengths[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, 1, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------ projections
+
+def init_attention(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * s).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def qkv_project(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray],
+                rope: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> q (B,H,S,hd), k/v (B,HKV,S,hd) with bias/qk-norm/rope."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cfg.pos_embedding == "rope" and positions is not None:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+# -------------------------------------------------------------------- mlp
+
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_ff: Optional[int] = None
+             ) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "gated_silu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dt),
+            "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dt),
+            "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dt),
+        }
+    return {
+        "w_up": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dt),
+        "b_up": jnp.zeros((f,), dt),
+        "w_down": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dt),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_type == "gated_silu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+
+
+# -------------------------------------------------------------------- moe
+
+def init_moe(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def moe(cfg: ModelConfig, p: Params, x: jnp.ndarray
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k routing, einsum dispatch, *group-wise*.
+
+    Tokens route within independent groups (one group per batch row) so
+    the dispatch/combine tensors are (G, Tg, E, C) with C ∝ Tg — linear
+    in total tokens, not quadratic — and the group axis shards on the
+    data axes while experts shard on the model axis (expert parallel).
+    FLOPs scale with active experts x capacity_factor.
+    Returns (y, aux_loss)."""
+    b0, s0, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tg = s0                                                  # per-group tokens
+    if cfg.moe_group_size and s0 % cfg.moe_group_size == 0:
+        tg = cfg.moe_group_size                              # bounded groups
+    xt = x.reshape(b0 * s0 // tg, tg, d)                     # (G, Tg, D)
+    b, s = xt.shape[0], tg
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # capacity-dropping routing; capacity_factor >= e/k makes it dropless
+    # (smoke/consistency tests use that; production cells accept drops)
+    capacity = min(tg * k, max(1, int(cfg.capacity_factor * k * tg / e)))
+    # assignment one-hots per routing slot
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G, Tg, k, E)
+    # position of each (token, slot) within its expert queue (per group)
+    flat = onehot.reshape(b, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0              # (G, Tg*k, E)
+    pos = pos.reshape(b, tg, k, e)
+    keep = (pos >= 0) & (pos < capacity)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+    onehot = onehot * keep
+
+    slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (G,Tg,k,E,C)
+    dispatch = jnp.einsum("gtke,gtkec->gtec", onehot, slot)  # (G,Tg,E,C)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", gate_vals, onehot, slot)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    hidden = hidden * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])   # (G,E,C,D)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))                # fraction per e
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b0, s0, d), aux

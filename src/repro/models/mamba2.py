@@ -1,0 +1,195 @@
+"""Mamba-2 block (state-space duality) [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD decomposition (pure-JAX einsum
+form here; the Pallas kernel in ``repro.kernels.ssd_scan`` is the TPU
+fast path with identical math — both validated against the sequential
+oracle).  Decode keeps the (H, P, N) SSM state + a (K-1)-deep causal
+conv state: constant memory per sequence, which is why mamba archs run
+the ``long_500k`` cell that full-attention archs must skip.
+
+Weights are stored per component (z / x / B / C / dt) rather than as
+one fused in_proj so tensor-parallel sharding can split d_inner and
+heads on the model axis without slicing across component boundaries
+(B/C are per-group and replicated; see repro/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    ck = cfg.ssm_conv_kernel
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_z": (jax.random.normal(keys[0], (d, di)) * s).astype(dt),
+        "w_x": (jax.random.normal(keys[1], (d, di)) * s).astype(dt),
+        "w_b": (jax.random.normal(keys[2], (d, g * ns)) * s).astype(dt),
+        "w_c": (jax.random.normal(keys[3], (d, g * ns)) * s).astype(dt),
+        "w_dt": (jax.random.normal(keys[4], (d, nh)) * s).astype(dt),
+        "conv_x": (jax.random.normal(keys[5], (ck, di)) * 0.1).astype(dt),
+        "conv_b": (jnp.zeros((ck, g * ns))).astype(dt),
+        "conv_c": (jnp.zeros((ck, g * ns))).astype(dt),
+        "conv_bias_x": jnp.zeros((di,), dt),
+        "conv_bias_b": jnp.zeros((g * ns,), dt),
+        "conv_bias_c": jnp.zeros((g * ns,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(keys[6], (di, d)) * di ** -0.5
+                  ).astype(dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: (B, L, C); w: (K, C).  ``state`` is
+    the trailing K-1 inputs from the previous call (decode)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)          # (B, L+K-1, C)
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xx[:, -(k - 1):, :] if k > 1 else state
+    return out + b, new_state
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                unroll: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD, pure JAX (einsum + scan over chunk states).
+
+    x (B,L,H,P) dt (B,L,H) a (H,) b/c (B,L,G,N) -> (y, final_state).
+    Math identical to kernels/ssd_scan.py and to the sequential oracle.
+    """
+    B_, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    g = H // G
+    q = min(chunk, L)
+    pad = (-L) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = L + pad
+    nc = lp // q
+    xf = x.astype(jnp.float32).reshape(B_, nc, q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, q, H)
+    bf = jnp.repeat(b.astype(jnp.float32), g, axis=2).reshape(B_, nc, q, H, N)
+    cf = jnp.repeat(c.astype(jnp.float32), g, axis=2).reshape(B_, nc, q, H, N)
+
+    logdec = jnp.cumsum(dtf * a[None, None, None, :], axis=2)  # (B,nc,q,H)
+    tri = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    diff = logdec[:, :, :, None, :] - logdec[:, :, None, :, :]  # (B,nc,t,s,H)
+    # mask BEFORE exp: masked entries have diff > 0 (logdec decreasing),
+    # and exp(large)*0 in the cotangent would give inf*0 = NaN grads
+    diff = jnp.where(tri[None, None, :, :, None], diff, 0.0)
+    gmat = jnp.where(tri[None, None, :, :, None],
+                     jnp.exp(diff) * dtf[:, :, None, :, :], 0.0)
+    scores = jnp.einsum("bcthn,bcshn->bctsh", cf, bf) * gmat
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, xf)
+
+    # per-chunk boundary state and carried recurrence
+    tail = jnp.exp(logdec[:, :, -1:, :] - logdec) * dtf       # (B,nc,q,H)
+    s_chunk = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", tail, xf, bf)
+    decay_chunk = jnp.exp(logdec[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        dchunk, schunk = inp
+        s_new = dchunk[..., None, None] * s_prev + schunk
+        return s_new, s_prev
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B_, H, P, N), jnp.float32))
+    s_fin, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (decay_chunk.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+    y_inter = jnp.exp(logdec)[..., None] * jnp.einsum(
+        "bcqhn,bchpn->bcqhp", cf, s_prevs)
+
+    y = (y_intra + y_inter).reshape(B_, lp, H, P)[:, :L]
+    return y.astype(x.dtype), s_fin
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, u: jnp.ndarray,
+                   init_state: Optional[Dict[str, jnp.ndarray]] = None,
+                   return_state: bool = False, policy=None):
+    """Full block: proj -> causal conv -> SSD -> gated norm -> out_proj.
+    u: (B, L, D).  Returns y (and new state when requested)."""
+    B_, L, D = u.shape
+    nh, hp = cfg.ssm_nheads, cfg.ssm_headdim
+    g, ns = cfg.ssm_ngroups, cfg.ssm_state
+    z = u @ p["w_z"]
+    x = u @ p["w_x"]
+    bmat = u @ p["w_b"]
+    cmat = u @ p["w_c"]
+    dtr = u @ p["w_dt"]
+    if policy is not None:
+        x, z = policy.mamba_inner(x), policy.mamba_inner(z)
+
+    st = init_state or {}
+    x, new_cx = _causal_conv(x, p["conv_x"], p["conv_bias_x"],
+                             st.get("conv_x"))
+    bmat, new_cb = _causal_conv(bmat, p["conv_b"], p["conv_bias_b"],
+                                st.get("conv_b"))
+    cmat, new_cc = _causal_conv(cmat, p["conv_c"], p["conv_bias_c"],
+                                st.get("conv_c"))
+    x, bmat, cmat = jax.nn.silu(x), jax.nn.silu(bmat), jax.nn.silu(cmat)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    xh = x.reshape(B_, L, nh, hp)
+    bh = bmat.reshape(B_, L, g, ns)
+    ch = cmat.reshape(B_, L, g, ns)
+    y, s_fin = ssd_chunked(xh, dt, a, bh, ch, cfg.ssm_chunk,
+                           st.get("ssm"), unroll=cfg.scan_unroll)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, L, cfg.d_inner).astype(u.dtype)
+
+    # gated RMSNorm (mamba2's norm_before_gate=False style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["gate_norm"]
+    out = yf.astype(u.dtype) @ p["w_out"]
+    if return_state:
+        return out, {"conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc,
+                     "ssm": s_fin}
+    return out
+
+
+def mamba2_decode_step(cfg: ModelConfig, p: Params, u: jnp.ndarray,
+                       state: Dict[str, jnp.ndarray], policy=None
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrent step.  u: (B, 1, D)."""
+    return mamba2_forward(cfg, p, u, init_state=state, return_state=True,
+                          policy=policy)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jnp.ndarray]:
+    k = cfg.ssm_conv_kernel - 1
+    gns = cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, k, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, k, gns), dtype),
+        "conv_c": jnp.zeros((batch, k, gns), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+    }

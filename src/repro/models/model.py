@@ -1,0 +1,282 @@
+"""Unified Model API over the architecture fleet.
+
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    loss   = model.loss(params, batch)                   # train
+    logits, cache = model.prefill(params, batch, cache_len)
+    logits, cache = model.decode_step(params, batch, cache)
+
+Batches are dicts: ``tokens``/``embeds`` (+ ``audio_embeds`` for
+enc-dec, ``positions`` (3,B,S) for M-RoPE), ``labels`` for training,
+``lengths`` (B,) or scalar for decode.  ``input_specs`` builds
+ShapeDtypeStruct stand-ins for every assigned shape cell (frontend
+stubs included) — the dry-run lowers against these with no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import layers as L
+from . import mamba2 as M
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+
+def _vocab_pad(v: int, mult: int = 256) -> int:
+    """Pad vocab to a shardable multiple (see DESIGN.md §5)."""
+    return -(-v // mult) * mult
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: str = "none",
+                 policy=None, unroll: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.policy = policy
+        self.unroll = unroll or cfg.scan_unroll  # roofline dry-run unroll
+        self.padded_vocab = _vocab_pad(cfg.vocab_size)
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k_emb, k_stack, k_head, k_pos = jax.random.split(key, 4)
+        params: Params = {}
+        if not cfg.input_embeds:
+            params["embed"] = (jax.random.normal(
+                k_emb, (self.padded_vocab, cfg.d_model)) * 0.02).astype(dt)
+        if cfg.family == "encdec":
+            params["stack"] = T.init_encdec(cfg, k_stack)
+            params["embed"] = (jax.random.normal(
+                k_emb, (self.padded_vocab, cfg.d_model)) * 0.02).astype(dt)
+            params["dec_pos"] = (jax.random.normal(
+                k_pos, (8192, cfg.d_model)) * 0.02).astype(dt)
+        elif cfg.family == "hybrid":
+            params["stack"] = T.init_hybrid(cfg, k_stack)
+        else:
+            params["stack"] = T.init_stack(cfg, k_stack, cfg.n_layers)
+        params["final_norm"] = L.init_norm(cfg, cfg.d_model)
+        if cfg.tie_embeddings and "embed" in params:
+            pass  # lm head reuses embed
+        else:
+            params["lm_head"] = (jax.random.normal(
+                k_head, (cfg.d_model, self.padded_vocab))
+                * cfg.d_model ** -0.5).astype(dt)
+        return params
+
+    # ----------------------------------------------------------- embed/out
+    def _embed(self, params: Params, batch: Dict[str, Any]) -> jnp.ndarray:
+        if self.cfg.input_embeds and "embeds" in batch:
+            return batch["embeds"].astype(jnp.dtype(self.cfg.dtype))
+        return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def _logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        x = L.apply_norm(self.cfg, params["final_norm"], x)
+        if self.cfg.tie_embeddings and "lm_head" not in params:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return logits[..., :self.cfg.vocab_size]
+
+    def _dec_pos(self, params: Params, seq: int) -> jnp.ndarray:
+        """Learned decoder positional embedding, zero-padded past the
+        table (whisper backbone exercised beyond its 448-token design
+        point — see DESIGN.md arch notes)."""
+        table = params["dec_pos"]
+        n = table.shape[0]
+        if seq <= n:
+            return table[:seq]
+        return jnp.pad(table, ((0, seq - n), (0, 0)))
+
+    def _positions(self, batch: Dict[str, Any], seq: int,
+                   bsz: int) -> jnp.ndarray:
+        if "positions" in batch:
+            return batch["positions"]
+        base = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
+                                (bsz, seq))
+        if self.cfg.mrope:
+            return jnp.broadcast_to(base[None], (3, bsz, seq))
+        return base
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Params, batch: Dict[str, Any]) -> jnp.ndarray:
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        bsz, seq = x.shape[0], x.shape[1]
+        positions = self._positions(batch, seq, bsz)
+        if self.policy is not None:
+            x = self.policy.act(x)
+        if cfg.family == "encdec":
+            enc = batch["audio_embeds"].astype(x.dtype)
+            enc_out = T.encoder_forward(cfg, params["stack"], enc,
+                                        self.remat, self.policy,
+                                        self.unroll)
+            x = x + self._dec_pos(params, seq)[None]
+            x = T.decoder_forward_encdec(cfg, params["stack"], x,
+                                         positions, enc_out,
+                                         self.remat, self.policy,
+                                         self.unroll)
+        elif cfg.family == "hybrid":
+            x = T.hybrid_forward(cfg, params["stack"], x, positions,
+                                 self.remat, self.policy, self.unroll)
+        else:
+            x, self._last_aux = T.stack_forward(cfg, params["stack"], x,
+                                                positions, self.remat,
+                                                self.policy, self.unroll)
+        return self._logits(params, x)
+
+    def loss(self, params: Params, batch: Dict[str, Any]) -> jnp.ndarray:
+        logits = self.forward(params, batch).astype(jnp.float32)
+        labels = batch["labels"]
+        # CE as logsumexp - logit[label]: both terms reduce over the
+        # (vocab-sharded) axis, so GSPMD lowers them as partial
+        # reductions + psum instead of all-gathering full logits
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None],
+                                     axis=-1)[..., 0]
+        nll = lse - picked
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        aux = getattr(self, "_last_aux", None)
+        if aux is not None and self.cfg.family == "moe":
+            loss = loss + 0.01 * aux / max(self.cfg.n_layers, 1)
+        return loss
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        lyr, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        if cfg.family == "ssm":
+            st = M.init_mamba_state(cfg, batch, dt)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (lyr,) + a.shape), st)
+        if cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every or cfg.n_layers
+            groups = cfg.n_layers // every
+            st = M.init_mamba_state(cfg, batch, dt)
+            mamba = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None, None],
+                                           (groups, every) + a.shape), st)
+            attn = {
+                "k": jnp.zeros((groups, batch, kv, cache_len, hd), dt),
+                "v": jnp.zeros((groups, batch, kv, cache_len, hd), dt),
+            }
+            return {"mamba": mamba, "attn": attn}
+        if cfg.family == "encdec":
+            return {
+                "k": jnp.zeros((lyr, batch, kv, cache_len, hd), dt),
+                "v": jnp.zeros((lyr, batch, kv, cache_len, hd), dt),
+                "xk": jnp.zeros((lyr, batch, kv, cfg.encoder_seq, hd), dt),
+                "xv": jnp.zeros((lyr, batch, kv, cfg.encoder_seq, hd), dt),
+            }
+        window = cfg.sliding_window
+        eff = min(cache_len, window) if window else cache_len
+        return {
+            "k": jnp.zeros((lyr, batch, kv, eff, hd), dt),
+            "v": jnp.zeros((lyr, batch, kv, eff, hd), dt),
+        }
+
+    def prefill(self, params: Params, batch: Dict[str, Any],
+                cache_len: int) -> Tuple[jnp.ndarray, Params]:
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        bsz, seq = x.shape[0], x.shape[1]
+        positions = self._positions(batch, seq, bsz)
+        if self.policy is not None:
+            x = self.policy.act(x)
+        if cfg.family == "encdec":
+            enc = batch["audio_embeds"].astype(x.dtype)
+            enc_out = T.encoder_forward(cfg, params["stack"], enc,
+                                        "none", self.policy, self.unroll)
+            x = x + self._dec_pos(params, seq)[None]
+            x, cache = T.decoder_prefill_encdec(cfg, params["stack"], x,
+                                                positions, enc_out,
+                                                cache_len, self.policy,
+                                                self.unroll)
+            return self._logits(params, x[:, -1:]), cache
+        if cfg.family == "hybrid":
+            x, cache = T.hybrid_prefill(cfg, params["stack"], x, positions,
+                                        cache_len, self.policy, self.unroll)
+        else:
+            x, cache = T.stack_prefill(cfg, params["stack"], x, positions,
+                                       cache_len, self.policy, self.unroll)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params: Params, batch: Dict[str, Any],
+                    cache: Params) -> Tuple[jnp.ndarray, Params]:
+        """One new token per sequence.  batch: tokens (B,1) or embeds
+        (B,1,D); lengths (B,) or scalar current cache fill."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        lengths = batch["lengths"]
+        if self.policy is not None:
+            x = self.policy.act(x)
+        if cfg.family == "encdec":
+            pos = (lengths if lengths.ndim else
+                   jnp.full((x.shape[0],), lengths))
+            x = x + jnp.take(params["dec_pos"],
+                             jnp.minimum(pos, 8191), axis=0)[:, None]
+            x, cache = T.decoder_decode_encdec(cfg, params["stack"], x,
+                                               cache, lengths, self.policy,
+                                               self.unroll)
+        elif cfg.family == "hybrid":
+            x, cache = T.hybrid_decode(cfg, params["stack"], x, cache,
+                                       lengths, self.policy, self.unroll)
+        else:
+            x, cache = T.stack_decode(cfg, params["stack"], x, cache,
+                                      lengths, self.policy, self.unroll)
+        return self._logits(params, x), cache
+
+    # --------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig,
+                    batch_override: Optional[int] = None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one shape cell (no allocation).
+        Frontend stubs: VLM/audio cells get precomputed embeddings."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        s = shape.seq_len
+        f32, i32 = jnp.float32, jnp.int32
+        bf16 = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch: Dict[str, Any] = {}
+            if cfg.input_embeds:
+                batch["embeds"] = sds((b, s, cfg.d_model), bf16)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+            batch["labels"] = sds((b, s), i32)
+            if cfg.mrope:
+                batch["positions"] = sds((3, b, s), i32)
+            if cfg.family == "encdec":
+                batch["audio_embeds"] = sds((b, cfg.encoder_seq,
+                                             cfg.d_model), bf16)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.input_embeds:
+                batch["embeds"] = sds((b, s, cfg.d_model), bf16)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+            if cfg.mrope:
+                batch["positions"] = sds((3, b, s), i32)
+            if cfg.family == "encdec":
+                batch["audio_embeds"] = sds((b, cfg.encoder_seq,
+                                             cfg.d_model), bf16)
+            return batch
+        # decode: one token against a cache of seq_len
+        batch = {"lengths": sds((b,), i32)}
+        if cfg.input_embeds:
+            batch["embeds"] = sds((b, 1, cfg.d_model), bf16)
+        else:
+            batch["tokens"] = sds((b, 1), i32)
+        if cfg.mrope:
+            batch["positions"] = sds((b, 1), i32)
+        batch["cache"] = jax.eval_shape(lambda: self.init_cache(b, s))
+        return batch

@@ -1,0 +1,501 @@
+"""Decoder / encoder-decoder / hybrid stacks over the layer library.
+
+All stacks scan over depth with stacked per-layer params (HLO size O(1)
+in depth — 64-layer configs compile in seconds and stay parsable for
+the roofline).  Remat policy is configurable per train-step.
+
+Cache convention: every attention layer owns ``k``/``v`` of shape
+(L, B, HKV, S, hd) (stacked on the scan axis); mamba layers own
+``conv`` (L, B, K-1, C) and ``ssm`` (L, B, H, P, N).  ``lengths`` (B,)
+tracks valid entries; writes happen at position ``lengths`` (uniform
+scalar fast path or per-sequence vmap path for continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import mamba2 as M
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------ cache utils
+
+def update_kv_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    k: jnp.ndarray, v: jnp.ndarray,
+                    lengths: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write new k/v (B, HKV, T, hd) at per-sequence offsets ``lengths``.
+    Uniform offsets (dry-run / static batching) use the scalar fast path."""
+    if lengths.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, 0, lengths, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, 0, lengths, 0))
+        return k_cache, v_cache
+
+    def upd(cache_b, new_b, pos):
+        return jax.lax.dynamic_update_slice(cache_b, new_b, (0, pos, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k.astype(k_cache.dtype), lengths)
+    v_cache = jax.vmap(upd)(v_cache, v.astype(v_cache.dtype), lengths)
+    return k_cache, v_cache
+
+
+# -------------------------------------------------------- decoder layers
+
+def init_decoder_layer(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "ssm":
+        return {"norm1": L.init_norm(cfg, cfg.d_model),
+                "mamba": M.init_mamba2(cfg, k1)}
+    if cfg.family == "hybrid":
+        return {"norm1": L.init_norm(cfg, cfg.d_model),
+                "mamba": M.init_mamba2(cfg, k1)}
+    p = {"norm1": L.init_norm(cfg, cfg.d_model),
+         "attn": L.init_attention(cfg, k1),
+         "norm2": L.init_norm(cfg, cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(cfg, k2)
+    else:
+        p["mlp"] = L.init_mlp(cfg, k2)
+    return p
+
+
+def attn_block_full(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray, q_offset: int = 0,
+                    causal: bool = True,
+                    policy=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Self-attention over the layer's own sequence (train / prefill).
+    Returns (out, (k, v)) so prefill can stash the cache."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    q, k, v = L.qkv_project(cfg, p["attn"], h, positions)
+    if policy is not None:
+        q, k, v = policy.attn_qkv(q, k, v)
+    o = L.run_attention(cfg, q, k, v, causal=causal, q_offset=q_offset)
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], -1)
+    o = o @ p["attn"]["wo"]
+    if policy is not None:
+        o = policy.act(o)
+    return x + o, (k, v)
+
+
+def attn_block_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                      lengths: jnp.ndarray, policy=None):
+    """One-token decode against the cache.  x: (B, 1, D).
+
+    Sliding-window archs may hand a *ring buffer* cache of size == window:
+    the write position wraps and every slot stays visible once filled —
+    the ring then IS the window (RoPE is applied at write time, so scores
+    only depend on absolute positions, not storage slots).  This is what
+    bounds the ``long_500k`` cell's live memory for SWA archs."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    pos = (lengths.reshape(-1, 1) if lengths.ndim else
+           jnp.full((x.shape[0], 1), lengths, jnp.int32))
+    if cfg.mrope:  # decode: all three M-RoPE components advance together
+        pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    q, k, v = L.qkv_project(cfg, p["attn"], h, pos)
+    cache_size = k_cache.shape[2]
+    window = cfg.sliding_window
+    ring = window is not None and cache_size == window
+    write_at = lengths % cache_size if ring else lengths
+    k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, write_at)
+    valid = (lengths + 1 if lengths.ndim else
+             jnp.full((x.shape[0],), lengths + 1, jnp.int32))
+    if ring:
+        valid = jnp.minimum(valid, cache_size)
+        window = None  # the ring already implements the window
+    if policy is not None and policy.seq_sharded_decode:
+        o = policy.sharded_decode_attention(q, k_cache, v_cache, valid,
+                                            window)
+    else:
+        o = L.decode_attention(q, k_cache, v_cache, valid, window)
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, -1)
+    o = o @ p["attn"]["wo"]
+    return x + o, (k_cache, v_cache)
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              policy=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = L.apply_norm(cfg, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = L.moe(cfg, p["moe"], h)
+    else:
+        y = L.mlp(cfg, p["mlp"], h)
+    if policy is not None:
+        y = policy.act(y)
+    return x + y, aux
+
+
+def decoder_layer_full(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                       positions: jnp.ndarray, q_offset: int = 0,
+                       policy=None):
+    """Full-sequence pass of one layer.  Returns (x, (k, v), aux)."""
+    if cfg.family in ("ssm", "hybrid"):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y = M.mamba2_forward(cfg, p["mamba"], h, policy=policy)
+        if policy is not None:
+            y = policy.act(y)
+        return x + y, None, jnp.zeros((), jnp.float32)
+    x, kv = attn_block_full(cfg, p, x, positions, q_offset, policy=policy)
+    x, aux = mlp_block(cfg, p, x, policy=policy)
+    return x, kv, aux
+
+
+def decoder_layer_full_with_state(cfg: ModelConfig, p: Params,
+                                  x: jnp.ndarray, policy=None):
+    """Mamba layer full pass that also returns the final SSM/conv state
+    (prefill path for ssm/hybrid)."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    y, state = M.mamba2_forward(cfg, p["mamba"], h, return_state=True,
+                                policy=policy)
+    if policy is not None:
+        y = policy.act(y)
+    return x + y, state
+
+
+def decoder_layer_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                         cache: Dict[str, jnp.ndarray],
+                         lengths: jnp.ndarray, policy=None):
+    if cfg.family in ("ssm", "hybrid"):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        y, new_state = M.mamba2_decode_step(cfg, p["mamba"], h, cache,
+                                            policy=policy)
+        if policy is not None:
+            y = policy.act(y)
+        return x + y, new_state, jnp.zeros((), jnp.float32)
+    x, (kc, vc) = attn_block_decode(cfg, p, x, cache["k"], cache["v"],
+                                    lengths, policy=policy)
+    x, aux = mlp_block(cfg, p, x, policy=policy)
+    return x, {"k": kc, "v": vc}, aux
+
+
+# ----------------------------------------------------------------- stacks
+
+def init_stack(cfg: ModelConfig, key: jax.Array, n_layers: int) -> Params:
+    keys = jax.random.split(key, n_layers)
+    per_layer = [init_decoder_layer(cfg, k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def stack_forward(cfg: ModelConfig, stacked: Params, x: jnp.ndarray,
+                  positions: jnp.ndarray, remat: str = "none",
+                  policy=None, unroll: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Train-mode pass over all layers (scan).  Returns (x, aux_sum).
+    ``unroll`` fully unrolls the depth loop — used by the roofline
+    dry-run so cost_analysis counts every layer (XLA reports while
+    bodies once)."""
+
+    def body(h, layer_p):
+        h2, _kv, aux = decoder_layer_full(cfg, layer_p, h, positions,
+                                          policy=policy)
+        return h2, aux
+
+    body = _maybe_remat(body, remat)
+    x, auxs = jax.lax.scan(body, x, stacked, unroll=unroll)
+    return x, jnp.sum(auxs)
+
+
+def stack_prefill(cfg: ModelConfig, stacked: Params, x: jnp.ndarray,
+                  positions: jnp.ndarray, cache_len: int,
+                  policy=None, unroll: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence pass returning the populated cache (padded to
+    ``cache_len``)."""
+    if cfg.family in ("ssm", "hybrid"):
+        def body(h, layer_p):
+            h2, state = decoder_layer_full_with_state(cfg, layer_p, h,
+                                                      policy=policy)
+            return h2, state
+        x, states = jax.lax.scan(body, x, stacked, unroll=unroll)
+        return x, states
+
+    pad = cache_len - x.shape[1]
+
+    def body(h, layer_p):
+        h2, (k, v), _aux = decoder_layer_full(cfg, layer_p, h, positions,
+                                              policy=policy)
+        kpad = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return h2, {"k": kpad, "v": vpad}
+
+    x, cache = jax.lax.scan(body, x, stacked, unroll=unroll)
+    return x, cache
+
+
+def stack_decode(cfg: ModelConfig, stacked: Params, x: jnp.ndarray,
+                 cache: Dict[str, jnp.ndarray], lengths: jnp.ndarray,
+                 policy=None, unroll: bool = False):
+    def body(h, xs):
+        layer_p, layer_cache = xs
+        h2, new_cache, _aux = decoder_layer_decode(cfg, layer_p, h,
+                                                   layer_cache, lengths,
+                                                   policy=policy)
+        return h2, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (stacked, cache), unroll=unroll)
+    return x, new_cache
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+# ------------------------------------------------------- hybrid (zamba2)
+
+def init_hybrid(cfg: ModelConfig, key: jax.Array) -> Params:
+    """n_layers mamba blocks + ONE shared attention block applied every
+    ``hybrid_attn_every`` layers (weights reused — zamba2's shared
+    block, simplified to act on the running hidden state; see DESIGN.md)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dense_cfg = _as_dense(cfg)
+    return {
+        "mamba_stack": init_stack(cfg, k1, cfg.n_layers),
+        "shared_attn": init_decoder_layer(dense_cfg, k2),
+    }
+
+
+def _as_dense(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense")
+
+
+def hybrid_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, remat: str = "none",
+                   policy=None, unroll: bool = False) -> jnp.ndarray:
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    groups = cfg.n_layers // every
+    dense_cfg = _as_dense(cfg)
+    stacked = p["mamba_stack"]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((groups, every) + a.shape[1:]), stacked)
+    for gi in range(groups):
+        group = jax.tree.map(lambda a: a[gi], grouped)
+        x, _ = stack_forward(cfg, group, x, positions, remat, policy,
+                             unroll)
+        x, _kv, _aux = decoder_layer_full(dense_cfg, p["shared_attn"], x,
+                                          positions, policy=policy)
+    return x
+
+
+def hybrid_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, cache_len: int, policy=None,
+                   unroll: bool = False):
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    groups = cfg.n_layers // every
+    dense_cfg = _as_dense(cfg)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((groups, every) + a.shape[1:]),
+        p["mamba_stack"])
+    mamba_states, attn_caches = [], []
+    pad = cache_len - x.shape[1]
+    for gi in range(groups):
+        group = jax.tree.map(lambda a: a[gi], grouped)
+        x, st = stack_prefill(cfg, group, x, positions, cache_len, policy,
+                              unroll)
+        mamba_states.append(st)
+        x, (k, v), _ = decoder_layer_full(dense_cfg, p["shared_attn"], x,
+                                          positions, policy=policy)
+        attn_caches.append({
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))})
+    cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *mamba_states),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches),
+    }
+    return x, cache
+
+
+def hybrid_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  cache: Dict[str, Any], lengths: jnp.ndarray, policy=None,
+                  unroll: bool = False):
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    groups = cfg.n_layers // every
+    dense_cfg = _as_dense(cfg)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((groups, every) + a.shape[1:]),
+        p["mamba_stack"])
+    new_mamba, new_attn = [], []
+    for gi in range(groups):
+        group = jax.tree.map(lambda a: a[gi], grouped)
+        gcache = jax.tree.map(lambda a: a[gi], cache["mamba"])
+        x, st = stack_decode(cfg, group, x, gcache, lengths, policy,
+                             unroll)
+        new_mamba.append(st)
+        acache = jax.tree.map(lambda a: a[gi], cache["attn"])
+        x, st2, _ = decoder_layer_decode(dense_cfg, p["shared_attn"], x,
+                                         acache, lengths, policy=policy)
+        new_attn.append(st2)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn),
+    }
+    return x, new_cache
+
+
+# ------------------------------------------------------ enc-dec (whisper)
+
+def init_encdec_layer(cfg: ModelConfig, key: jax.Array,
+                      cross: bool) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_norm(cfg, cfg.d_model),
+         "attn": L.init_attention(cfg, k1),
+         "norm2": L.init_norm(cfg, cfg.d_model),
+         "mlp": L.init_mlp(cfg, k2)}
+    if cross:
+        p["norm_x"] = L.init_norm(cfg, cfg.d_model)
+        p["xattn"] = L.init_attention(cfg, k3)
+    return p
+
+
+def init_encdec(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    enc_layers = [init_encdec_layer(cfg, k, cross=False)
+                  for k in jax.random.split(k1, cfg.encoder_layers)]
+    dec_layers = [init_encdec_layer(cfg, k, cross=True)
+                  for k in jax.random.split(k2, cfg.n_layers)]
+    return {
+        "encoder": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+        "decoder": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_layers),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def encoder_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                    remat: str = "none", policy=None,
+                    unroll: bool = False) -> jnp.ndarray:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 x.shape[:2])
+
+    def body(h, layer_p):
+        h, _ = attn_block_full(cfg, layer_p, h, positions, causal=False,
+                               policy=policy)
+        h2 = L.apply_norm(cfg, layer_p["norm2"], h)
+        h = h + L.mlp(cfg, layer_p["mlp"], h2)
+        return h, None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, p["encoder"], unroll=unroll)
+    return L.apply_norm(cfg, p["enc_norm"], x)
+
+
+def cross_attention(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                    enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                    policy=None) -> jnp.ndarray:
+    """Decoder cross-attn against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    hn = L.apply_norm(cfg, p["norm_x"], x)
+    q = (hn @ p["xattn"]["wq"])
+    if cfg.qkv_bias:
+        q = q + p["xattn"]["bq"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    o = L.run_attention(cfg, q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["xattn"]["wo"]
+    if policy is not None:
+        o = policy.act(o)
+    return x + o
+
+
+def encoder_kv(cfg: ModelConfig, dec_stacked: Params,
+               enc_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute per-decoder-layer cross K/V from encoder output
+    (stacked on the layer axis)."""
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def per_layer(layer_p):
+        k = enc_out @ layer_p["xattn"]["wk"]
+        v = enc_out @ layer_p["xattn"]["wv"]
+        if cfg.qkv_bias:
+            k, v = k + layer_p["xattn"]["bk"], v + layer_p["xattn"]["bv"]
+        k = k.reshape(b, se, kv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, se, kv, hd).transpose(0, 2, 1, 3)
+        return k, v
+
+    return jax.vmap(per_layer)(dec_stacked)
+
+
+def decoder_forward_encdec(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                           positions: jnp.ndarray, enc_out: jnp.ndarray,
+                           remat: str = "none", policy=None,
+                           unroll: bool = False) -> jnp.ndarray:
+    xk, xv = encoder_kv(cfg, p["decoder"], enc_out)
+
+    def body(h, xs):
+        layer_p, ek, ev = xs
+        h, _ = attn_block_full(cfg, layer_p, h, positions, policy=policy)
+        h = cross_attention(cfg, layer_p, h, (ek, ev), policy=policy)
+        h2 = L.apply_norm(cfg, layer_p["norm2"], h)
+        h = h + L.mlp(cfg, layer_p["mlp"], h2)
+        return h, None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, (p["decoder"], xk, xv), unroll=unroll)
+    return x
+
+
+def decoder_prefill_encdec(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                           positions: jnp.ndarray, enc_out: jnp.ndarray,
+                           cache_len: int, policy=None,
+                           unroll: bool = False):
+    """Full decoder pass that also returns the populated self-attn cache
+    (k/v captured from the same projections the forward pass used)."""
+    xk, xv = encoder_kv(cfg, p["decoder"], enc_out)
+    pad = cache_len - x.shape[1]
+
+    def body(h, xs):
+        layer_p, ek, ev = xs
+        h, (k, v) = attn_block_full(cfg, layer_p, h, positions,
+                                    policy=policy)
+        h = cross_attention(cfg, layer_p, h, (ek, ev), policy=policy)
+        h2 = L.apply_norm(cfg, layer_p["norm2"], h)
+        h = h + L.mlp(cfg, layer_p["mlp"], h2)
+        kpad = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return h, {"k": kpad, "v": vpad}
+
+    x, kv = jax.lax.scan(body, x, (p["decoder"], xk, xv), unroll=unroll)
+    cache = {"k": kv["k"], "v": kv["v"], "xk": xk, "xv": xv}
+    return x, cache
+
+
+def decoder_decode_encdec(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                          cache: Dict[str, jnp.ndarray],
+                          lengths: jnp.ndarray, policy=None,
+                          unroll: bool = False):
+    """One-token enc-dec decode: causal self-attn cache + static cross KV."""
+    def body(h, xs):
+        layer_p, layer_cache = xs
+        h, (kc, vc) = attn_block_decode(cfg, layer_p, h,
+                                        layer_cache["k"], layer_cache["v"],
+                                        lengths, policy=policy)
+        h = cross_attention(cfg, layer_p, h,
+                            (layer_cache["xk"], layer_cache["xv"]),
+                            policy=policy)
+        h2 = L.apply_norm(cfg, layer_p["norm2"], h)
+        h = h + L.mlp(cfg, layer_p["mlp"], h2)
+        return h, {"k": kc, "v": vc, "xk": layer_cache["xk"],
+                   "xv": layer_cache["xv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (p["decoder"], cache),
+                                unroll=unroll)
+    return x, new_cache

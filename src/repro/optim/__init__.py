@@ -1,0 +1,147 @@
+"""Optimizers (pure JAX): AdamW with fp32 master weights + global-norm
+clipping, SGD-momentum, and the train-state plumbing shared by the
+launcher and the dry-run.  Optimizer state shards like the params
+(plus ZeRO-1 on the data axis via the sharding policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    # (step+1)/warmup so step 0 trains at lr/warmup, not at zero
+    warm = jnp.minimum((step.astype(jnp.float32) + 1.0)
+                       / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def init_opt_state(params: Params, cfg: OptimizerConfig) -> Params:
+    # jnp.array copies: master must never alias params (donation safety
+    # when compute dtype is already f32)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32), params)
+    if cfg.name == "sgd":
+        return {"master": master,
+                "mu": jax.tree.map(jnp.zeros_like, master)}
+    return {"master": master,
+            "mu": jax.tree.map(jnp.zeros_like, master),
+            "nu": jax.tree.map(jnp.zeros_like, master)}
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * factor, grads), norm
+
+
+def apply_update(params: Params, grads: Params, opt_state: Params,
+                 step: jnp.ndarray, cfg: OptimizerConfig
+                 ) -> Tuple[Params, Params, Dict[str, jnp.ndarray]]:
+    """One optimizer step.  ``params`` are the compute-dtype copies;
+    masters stay fp32.  Returns (params, opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+
+    if cfg.name == "sgd":
+        new_mu = jax.tree.map(
+            lambda m, g: cfg.beta1 * m + g, opt_state["mu"], grads)
+        new_master = jax.tree.map(
+            lambda p, m: p - lr * (m + cfg.weight_decay * p),
+            opt_state["master"], new_mu)
+        new_state = {"master": new_master, "mu": new_mu}
+    else:
+        b1, b2 = cfg.beta1, cfg.beta2
+        new_mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                              opt_state["mu"], grads)
+        new_nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                              opt_state["nu"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                             + cfg.weight_decay * p)
+
+        new_master = jax.tree.map(upd, opt_state["master"], new_mu, new_nu)
+        new_state = {"master": new_master, "mu": new_mu, "nu": new_nu}
+
+    new_params = jax.tree.map(
+        lambda mp, p: mp.astype(p.dtype), new_master, params)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    compression=None, n_micro: int = 1,
+                    grad_spec=None) -> Callable:
+    """Build the jittable train step: loss -> grads (optionally
+    accumulated over n_micro microbatches, overlapping per-microbatch
+    reductions with the next microbatch's compute) -> (optional
+    compressed DP reduction) -> clip -> AdamW -> recast.
+
+    ``grad_spec``: optional pytree of PartitionSpecs constraining the
+    gradients (ZeRO-2 style: the data-parallel gradient all-reduce
+    becomes a reduce-scatter and each shard updates its slice of the
+    optimizer state — grads never materialise replicated)."""
+
+    def train_step(state: Params, batch: Dict[str, Any]):
+        params = state["params"]
+
+        if n_micro > 1:
+            from repro.distributed import make_accumulating_step
+            loss, grads = make_accumulating_step(
+                model.loss, n_micro,
+                unroll=getattr(model, "unroll", False),
+                grad_spec=grad_spec)(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch))(params)
+        if grad_spec is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_spec,
+                is_leaf=lambda x: hasattr(x, "shape"))
+        if compression is not None:
+            grads = compression(grads)
+        new_params, new_opt, metrics = apply_update(
+            params, grads, state["opt"], state["step"], opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, key: jax.Array, opt_cfg: OptimizerConfig
+                     ) -> Params:
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}

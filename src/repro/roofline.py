@@ -1,0 +1,231 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh) cell, all in seconds-per-step on
+TPU v5e constants (197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI,
+4 links/chip):
+
+  compute    = per-device HLO FLOPs   / peak_FLOP/s
+  memory     = per-device HLO bytes   / HBM_bw
+  collective = per-device collective bytes / (links × link_bw)
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+quantities (verified empirically), so no further division by chip count
+is needed.  Collective bytes are not in cost_analysis: we parse the
+compiled HLO text and sum operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute
+(per-shard shapes; all-reduce counted twice for the bidirectional
+ring phase structure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+PEAK_INT8 = 394e12
+HBM_BW = 819e9               # bytes/s
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS = 4                # 2-D torus
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# matches e.g.:  %x = bf16[16,512]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    if not dims:
+        return nbytes
+    return int(np.prod([int(d) for d in dims.split(",")])) * nbytes
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+# ops whose operands/results must round-trip HBM even under perfect
+# elementwise fusion (the TPU compiler fuses elementwise chains into
+# these; the CPU backend's cost_analysis does not, so raw
+# "bytes accessed" is a pessimistic bound — we report both).
+_HEAVY_OPS = ("dot", "convolution", "gather", "scatter",
+              "dynamic-slice", "dynamic-update-slice")
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\]")
+_HEAVY_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^\n=]*?\s"
+    r"(dot|convolution|gather|scatter|dynamic-slice|dynamic-update-slice)"
+    r"\(([^)]*)\)")
+
+
+def essential_bytes(hlo_text: str,
+                    exclude_trailing: Optional[set] = None) -> float:
+    """Fusion-adjusted HBM traffic: sum of operand+result bytes of the
+    heavy ops only (matmuls/convs/gathers/scatters/slices).  Entry
+    args/outputs are added by the caller from memory_analysis.
+
+    ``exclude_trailing``: set of (dim[-2], dim[-1]) pairs to drop —
+    used for flash-attention accounting, where the (seq, chunk) score
+    and probability tensors live in VMEM inside the Pallas kernel and
+    never round-trip HBM (kernels/flash_attention.py, validated in
+    interpret mode)."""
+    shapes: Dict[str, Tuple[int, Tuple[int, ...]]] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        dims = tuple(int(x) for x in m.group(3).split(",")) if m.group(3) \
+            else ()
+        shapes[m.group(1)] = (_shape_bytes(m.group(2), m.group(3)), dims)
+
+    def excluded(dims: Tuple[int, ...]) -> bool:
+        return bool(exclude_trailing) and len(dims) >= 2 \
+            and (dims[-2], dims[-1]) in exclude_trailing
+
+    total = 0.0
+    for m in _HEAVY_RE.finditer(hlo_text):
+        dtype, dims_s, _op, args = m.groups()
+        dims = tuple(int(x) for x in dims_s.split(",")) if dims_s else ()
+        if not excluded(dims):
+            total += _shape_bytes(dtype, dims_s)
+        for a in args.split(","):
+            a = a.strip()
+            if a.startswith("%") and a[1:] in shapes:
+                nbytes, adims = shapes[a[1:]]
+                if not excluded(adims):
+                    total += nbytes
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # async pairs (-start/-done) would double count; the regex strips
+        # the suffix so skip the matching -done by position pairing:
+        span = hlo_text[m.start():m.end()]
+        if "-done(" in span:
+            continue
+        b = _shape_bytes(dtype, dims)
+        if kind == "all-reduce":
+            b *= 2          # reduce-scatter + all-gather phases on the ring
+        counts[kind] += 1
+        by_kind[kind] += b
+    return CollectiveStats(counts, by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float         # raw cost_analysis (unfused bound)
+    collective_bytes_per_dev: float
+    t_compute: float
+    t_memory: float              # raw bytes / HBM_bw (pessimistic)
+    t_collective: float
+    model_flops: float           # 6·N·D or 2·N·D_tok, whole step
+    peak_bytes_per_dev: float    # memory_analysis residency
+    collective_counts: Dict[str, int]
+    essential_bytes_per_dev: float = 0.0   # fused-traffic bound
+    t_memory_fused: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        """Bottleneck under the fused-memory estimate (the TPU compiler
+        fuses the elementwise chains the CPU backend counts one by one;
+        both memory bounds are reported)."""
+        terms = {"compute": self.t_compute,
+                 "memory": self.t_memory_fused or self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Lower-bound step time: max of the three overlapped terms
+        (fused-memory estimate)."""
+        return max(self.t_compute, self.t_memory_fused or self.t_memory,
+                   self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO FLOPs × chips) — remat/redundancy waste."""
+        total_hlo = self.flops_per_dev * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip-seconds the *useful* model FLOPs occupy —
+        the MFU-style score this repo optimizes (1.0 == roofline)."""
+        denom = self.t_step * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, t_step=self.t_step,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            chips: int, model_flops: float) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes)
+    except Exception:
+        peak = 0.0
+    stats = parse_collectives(compiled.as_text())
+    coll = stats.total_bytes
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops, bytes_per_dev=bytes_acc,
+        collective_bytes_per_dev=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=bytes_acc / HBM_BW,
+        t_collective=coll / (ICI_LINKS * ICI_LINK_BW),
+        model_flops=model_flops,
+        peak_bytes_per_dev=peak,
+        collective_counts={k: v for k, v in stats.counts.items() if v},
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS per step: 6·N_active·D for training (fwd+bwd),
+    2·N_active·D_tokens for inference cells (fwd only).  N excludes
+    embedding tables (standard convention)."""
+    n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    tokens = shape.global_batch              # one new token per sequence
+    return 2.0 * n * tokens

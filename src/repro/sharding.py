@@ -1,0 +1,336 @@
+"""Sharding policies for the architecture fleet.
+
+This is the paper's "hardware-aware fitter" lifted to a TPU pod (see
+DESIGN.md §4): a ``ShardingPolicy`` is one *option* in the pod-scale
+design space — it decides, per parameter and activation, how the
+(pod, data, model) mesh axes are used, under the same style of
+divisibility constraints the paper applies to (N_i, N_l):
+
+  * weights: 2-D "megatron" TP — column-parallel in, row-parallel out,
+    experts on the model axis, vocab padded to a shardable multiple;
+  * activations: batch on (pod, data);
+  * decode KV caches: sequence-sharded on the model axis (plus data
+    when batch == 1), consumed by shard_map flash-decoding — this is
+    what lets a 500k-token cache fit;
+  * anything whose dim does not divide the axis stays replicated (the
+    fitter simply scores that option worse, as the paper's fitter does
+    with infeasible (N_i, N_l)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Params = Dict[str, Any]
+
+# rule table: leaf-name -> spec builder over (model_axis,)
+# a rule is a tuple pattern where "M" marks the model-sharded dim.
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embeddings / head
+    "embed": ("M", None),
+    "lm_head": (None, "M"),
+    "dec_pos": (None, None),
+    # attention
+    "wq": (None, "M"), "wk": (None, "M"), "wv": (None, "M"),
+    "wo": ("M", None),
+    "bq": ("M",), "bk": ("M",), "bv": ("M",),
+    "q_norm": (None,), "k_norm": (None,),
+    # mlp
+    "w_gate": (None, "M"), "w_up": (None, "M"), "w_down": ("M", None),
+    "b_up": ("M",), "b_down": (None,),
+    # moe (expert-parallel on the model axis)
+    "router": (None, None),
+    "moe/w_gate": ("M", None, None), "moe/w_up": ("M", None, None),
+    "moe/w_down": ("M", None, None),
+    # norms
+    "scale": (None,), "bias": (None,),
+    # mamba2 (d_inner / heads on the model axis; B/C per-group replicated)
+    "w_z": (None, "M"), "w_x": (None, "M"),
+    "w_b": (None, None), "w_c": (None, None), "w_dt": (None, "M"),
+    "conv_x": (None, "M"), "conv_b": (None, None), "conv_c": (None, None),
+    "conv_bias_x": ("M",), "conv_bias_b": (None,), "conv_bias_c": (None,),
+    "a_log": ("M",), "dt_bias": ("M",), "d_skip": ("M",),
+    "gate_norm": ("M",), "w_out": ("M", None),
+}
+
+
+@dataclasses.dataclass
+class PolicyOptions:
+    """The DSE-explorable knobs of a sharding policy."""
+
+    shard_model: bool = True          # use the model axis at all
+    shard_activation_heads: bool = True
+    seq_shard_decode: bool = True     # flash-decoding over sharded caches
+    zero1: bool = True                # optimizer state sharded on data
+    remat: str = "dots"
+    activation_dp: bool = True        # constrain (B,S,D) batch to data axes
+    # Megatron-style sequence parallelism: residual-stream activations
+    # sharded (batch -> data, seq -> model); norms/elementwise go local,
+    # TP all-reduces become reduce-scatter + all-gather pairs, and
+    # activation residency drops by the model-axis size.
+    sequence_parallel: bool = False
+    n_micro: int = 1                  # gradient-accumulation microbatches
+    zero2_grads: bool = False         # reduce-scatter grads (ZeRO-2)
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig,
+                 options: Optional[PolicyOptions] = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.opt = options or PolicyOptions()
+        axes = mesh.axis_names
+        self.model_axis = "model" if "model" in axes else None
+        self.dp_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in axes)
+        self.model_size = (mesh.shape["model"]
+                           if self.model_axis else 1)
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp_axes])
+                           ) if self.dp_axes else 1
+        self.seq_sharded_decode = (self.opt.seq_shard_decode
+                                   and self.model_axis is not None)
+        self._decode_seq_axes: Optional[Tuple[str, ...]] = None
+
+    # --------------------------------------------------------- param specs
+    def _rule_for(self, path: Tuple[str, ...], ndim: int) -> P:
+        name = path[-1]
+        key = name
+        if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+            key = f"moe/{name}"
+        rule = _PARAM_RULES.get(key)
+        if rule is None:
+            return P()
+        spec = tuple(
+            (self.model_axis if (x == "M" and self.opt.shard_model
+                                 and self.model_axis) else None)
+            for x in rule)
+        # stacked layer/group leading dims -> prepend Nones
+        while len(spec) < ndim:
+            spec = (None,) + spec
+        return P(*spec)
+
+    def param_specs(self, params: Params) -> Params:
+        def spec(path, leaf):
+            names = tuple(
+                p.key if hasattr(p, "key") else str(p) for p in path)
+            ps = self._rule_for(names, np.ndim(leaf))
+            return self._validated(ps, np.shape(leaf))
+        return jax.tree_util.tree_map_with_path(spec, params)
+
+    def _validated(self, ps: P, shape: Tuple[int, ...]) -> P:
+        """Divisibility guard: drop axes that do not divide the dim
+        (the fitter's feasibility rule)."""
+        fixed = []
+        for dim, axis in zip(shape, tuple(ps) + (None,) * len(shape)):
+            if axis is None:
+                fixed.append(None)
+                continue
+            size = int(np.prod([self.mesh.shape[a] for a in
+                                (axis if isinstance(axis, tuple) else (axis,))]))
+            fixed.append(axis if dim % size == 0 else None)
+        return P(*fixed)
+
+    def param_shardings(self, params: Params) -> Params:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.param_specs(params),
+            is_leaf=lambda x: isinstance(x, P))
+
+    # ----------------------------------------------------- batch/cache specs
+    def batch_specs(self, batch: Dict[str, Any],
+                    shape: ShapeConfig) -> Dict[str, Any]:
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+
+        def spec(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else str(p)
+                          for p in path)
+            nd = len(leaf.shape)
+            if "cache" in names:
+                return self._validated(self.cache_spec(names, nd, leaf.shape),
+                                       leaf.shape)
+            name = names[-1]
+            if name == "positions" and nd == 3:   # (3, B, S) M-RoPE
+                return self._validated(P(None, dp, None), leaf.shape)
+            if name == "lengths":
+                return self._validated(P(dp), leaf.shape)
+            if name in ("tokens", "labels"):
+                return self._validated(P(dp, None), leaf.shape)
+            if name in ("embeds", "audio_embeds"):
+                return self._validated(P(dp, None, None), leaf.shape)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(spec, batch)
+
+    def cache_spec(self, names: Tuple[str, ...], ndim: int,
+                   shape: Tuple[int, ...]) -> P:
+        """Decode caches.  KV caches (…, B, KV, S, hd): batch on data,
+        sequence on model (plus data when batch cannot use it).  Mamba
+        states: batch on data, inner/heads on model."""
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        name = names[-1]
+        if name in ("k", "v", "xk", "xv"):
+            batch_dim = shape[-4]
+            seq_axis: Any = None
+            if self.seq_sharded_decode and name in ("k", "v"):
+                seq_axis = self.model_axis
+                if batch_dim == 1 and self.dp_axes:
+                    seq_axis = self.dp_axes + (self.model_axis,)
+                    dp = None
+            lead = (None,) * (ndim - 4)
+            self._decode_seq_axes = (
+                seq_axis if isinstance(seq_axis, tuple)
+                else ((seq_axis,) if seq_axis else None))
+            return P(*lead, dp if shape[-4] > 1 else None, None,
+                     seq_axis, None)
+        if name == "ssm":               # (L, B, H, P, N)
+            lead = (None,) * (ndim - 4)
+            return P(*lead, dp if shape[-4] > 1 else None,
+                     self.model_axis, None, None)
+        if name.startswith("conv"):     # (L, B, K-1, C)
+            lead = (None,) * (ndim - 3)
+            return P(*lead, dp if shape[-3] > 1 else None, None,
+                     self.model_axis if name.endswith("x") else None)
+        return P()
+
+    def batch_shardings(self, batch, shape):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.batch_specs(batch, shape),
+            is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------ activation constraints
+    def act(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, S, D) residual-stream constraint: batch over data axes,
+        plus sequence over the model axis when sequence_parallel."""
+        if not self.opt.activation_dp or not self.dp_axes:
+            return x
+        dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        if x.shape[0] % self.dp_size != 0:
+            return x
+        if (self.opt.sequence_parallel and self.model_axis and x.ndim >= 3
+                and x.shape[1] % self.model_size == 0):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh,
+                                 P(dp, self.model_axis,
+                                   *(None,) * (x.ndim - 2))))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(dp, *(None,) * (x.ndim - 1))))
+
+    def mamba_inner(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, L, d_inner): d_inner on the model axis."""
+        if not self.model_axis or x.shape[-1] % self.model_size != 0:
+            return self.act(x)
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        if x.shape[0] % self.dp_size != 0:
+            dp = None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(dp, None, self.model_axis)))
+
+    def attn_qkv(self, q, k, v):
+        """(B, H, S, hd): heads on model when divisible, else leave the
+        partitioner to choose (scored by the fitter)."""
+        if (not self.opt.shard_activation_heads or not self.model_axis):
+            return q, k, v
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        if q.shape[0] % self.dp_size != 0:
+            dp = None
+
+        def c(x):
+            if x.shape[1] % self.model_size == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh,
+                                     P(dp, self.model_axis, None, None)))
+            return x
+        return c(q), c(k), c(v)
+
+    # ------------------------------------------- shard_map flash-decoding
+    def sharded_decode_attention(self, q: jnp.ndarray, k_cache: jnp.ndarray,
+                                 v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                                 window: Optional[int]) -> jnp.ndarray:
+        """Decode attention over a sequence-sharded cache: each shard
+        computes local (m, l, o) online-softmax stats; a log-sum-exp
+        combine over the sequence axes yields the exact result.  The
+        collective is O(B*H*d) — independent of cache length."""
+        seq_axes = self._decode_seq_axes or (
+            (self.model_axis,) if self.model_axis else None)
+        if seq_axes is None:
+            from repro.models.layers import decode_attention
+            return decode_attention(q, k_cache, v_cache, lengths, window)
+        b = q.shape[0]
+        dp = None
+        if b > 1 and self.dp_axes and b % self.dp_size == 0 \
+                and not any(a in seq_axes for a in self.dp_axes):
+            dp = (self.dp_axes if len(self.dp_axes) > 1
+                  else self.dp_axes[0])
+        qspec = P(dp, None, None, None)
+        cspec = P(dp, None, seq_axes if len(seq_axes) > 1 else seq_axes[0],
+                  None)
+        lspec = P(dp)
+
+        hkv = k_cache.shape[1]
+        g = q.shape[1] // hkv
+        scale = q.shape[-1] ** -0.5
+
+        def local(q_l, k_l, v_l, len_l):
+            # global offset of this shard's cache slice
+            idx = jnp.zeros((), jnp.int32)
+            mult = 1
+            for a in reversed(seq_axes):
+                idx = idx + jax.lax.axis_index(a) * mult
+                mult = mult * jax.lax.axis_size(a)
+            chunk = k_l.shape[2]
+            offset = idx * chunk
+            qg = q_l.reshape(q_l.shape[0], hkv, g, -1).astype(jnp.float32)
+            s = jnp.einsum("bkgd,bksd->bkgs", qg,
+                           k_l.astype(jnp.float32)) * scale
+            kpos = offset + jnp.arange(chunk)[None, :]
+            mask = kpos < len_l[:, None]
+            if window is not None:
+                mask &= kpos > (len_l[:, None] - 1 - window)
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+            m_l = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m_l)
+            l_l = jnp.sum(p, axis=-1, keepdims=True)
+            o_l = jnp.einsum("bkgs,bksd->bkgd", p,
+                             v_l.astype(jnp.float32))
+            # combine across sequence shards
+            m = jax.lax.pmax(m_l, seq_axes)
+            w = l_l * jnp.exp(m_l - m)
+            o = jax.lax.psum(o_l * jnp.exp(m_l - m), seq_axes)
+            denom = jax.lax.psum(w, seq_axes)
+            o = o / jnp.maximum(denom, 1e-30)
+            return o.reshape(q_l.shape[0], -1, 1, q_l.shape[-1]
+                             ).astype(q_l.dtype)
+
+        return jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(qspec, cspec, cspec, lspec),
+            out_specs=qspec,
+            check_vma=False,
+        )(q, k_cache, v_cache, lengths)
+
+    # --------------------------------------------------------------- zero-1
+    def optimizer_spec(self, param_spec: P, shape: Tuple[int, ...]) -> P:
+        """ZeRO-1: additionally shard optimizer state on the data axis
+        along the first still-replicated, divisible dim."""
+        if not self.opt.zero1 or not self.dp_axes:
+            return param_spec
+        axis = self.dp_axes[-1]          # 'data'
+        size = self.mesh.shape[axis]
+        spec = list(tuple(param_spec) + (None,) * (len(shape) - len(param_spec)))
+        for i, (dim, cur) in enumerate(zip(shape, spec)):
+            if cur is None and dim % size == 0 and dim >= size:
+                spec[i] = axis
+                return P(*spec)
+        return param_spec

@@ -1,0 +1,49 @@
+"""Standalone average-pool stages: parser, kernels, end-to-end int8."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import parser
+from repro.core.synthesis import CNN2Gate
+from repro.kernels import ref
+from repro.models import cnn
+
+RNG = np.random.default_rng(11)
+
+
+def test_parser_does_not_fuse_avgpool():
+    pm = parser.parse(cnn.tiny_cnn_gap())
+    kinds = [(l.kind, l.pool_type if l.kind == "pool" else None,
+              l.pool is not None) for l in pm.layers]
+    # conv (no fused pool), avg pool, conv, global avg pool, fc
+    assert kinds == [("conv", None, False), ("pool", "avg", False),
+                     ("conv", None, False), ("pool", "avg", False),
+                     ("fc", None, False)]
+
+
+@settings(max_examples=50, deadline=None)
+@given(h=st.integers(4, 16), c=st.integers(1, 8),
+       k=st.sampled_from([2, 3]), s=st.sampled_from([1, 2]))
+def test_avgpool_ref_matches_float_rounding(h, c, k, s):
+    if h < k:
+        return
+    x = RNG.integers(-128, 128, (1, h, h, c), np.int8)
+    got = np.asarray(ref.avgpool2d_ref(jnp.asarray(x), k, s))
+    # round-half-up fixed-point mean
+    from numpy.lib.stride_tricks import sliding_window_view
+    win = sliding_window_view(x.astype(np.int64), (k, k), axis=(1, 2))
+    win = win[:, ::s, ::s]
+    want = np.floor((win.sum((-1, -2)) + k * k // 2) / (k * k))
+    np.testing.assert_array_equal(got, np.clip(want, -128, 127))
+
+
+def test_int8_gap_network_matches_float_top1():
+    g = cnn.tiny_cnn_gap(batch=4)
+    gate = CNN2Gate.from_graph(g)
+    x = RNG.standard_normal((4, 3, 32, 32)).astype(np.float32) * 0.5
+    gate.calibrate_quantization(x)
+    y_q = np.asarray(gate.build("emulation")(jnp.asarray(x)))
+    y_f = np.asarray(cnn.run_float(g, jnp.asarray(x)))
+    assert y_q.shape == (4, 10)
+    assert np.all(y_q.argmax(-1) == y_f.argmax(-1))

@@ -1,0 +1,151 @@
+"""Checkpointing: roundtrip, atomicity, resume, elastic reshard, GC."""
+import os
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def make_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 16)),
+                                    jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(16), jnp.bfloat16)},
+        "opt": {"mu": {"w": jnp.zeros((8, 16)), "b": jnp.ones(16)}},
+        "step": jnp.asarray(42, jnp.int32),
+    }
+
+
+def assert_tree_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x, dtype=np.float32), np.asarray(y, dtype=np.float32)),
+        a, b)
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 42, tree, extra={"note": "hi"})
+    skel = jax.tree.map(np.zeros_like, tree)
+    restored, step, extra = ckpt.restore(str(tmp_path), skel)
+    assert step == 42 and extra["note"] == "hi"
+    assert_tree_equal(tree, restored)
+    # dtype preservation (bf16 leaf)
+    assert np.asarray(restored["params"]["b"]).dtype == jnp.bfloat16
+
+
+def test_latest_pointer_and_resume(tmp_path):
+    t1, t2 = make_tree(1), make_tree(2)
+    ckpt.save(str(tmp_path), 10, t1)
+    ckpt.save(str(tmp_path), 20, t2)
+    assert ckpt.latest_step(str(tmp_path)) == 20
+    restored, step, _ = ckpt.restore(str(tmp_path),
+                                     jax.tree.map(np.zeros_like, t2))
+    assert step == 20
+    assert_tree_equal(t2, restored)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"w": np.zeros((8, 4))})
+
+
+def test_elastic_reshard_across_mesh_sizes(tmp_path):
+    """Save under one mesh, restore under a different sharding — the
+    manifest stores global shapes, so any target works."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if len(jax.devices()) < 2:
+        mesh1 = jax.make_mesh((1,), ("data",))
+        mesh2 = jax.make_mesh((1,), ("data",))
+    else:
+        mesh1 = jax.make_mesh((2,), ("data",))
+        mesh2 = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    sharded = jax.device_put(
+        tree["w"], NamedSharding(mesh1, P("data", None)))
+    ckpt.save(str(tmp_path), 5, {"w": sharded})
+    target = {"w": NamedSharding(mesh2, P(None, None))}
+    restored, step, _ = ckpt.restore(str(tmp_path),
+                                     {"w": np.zeros((8, 8), np.float32)},
+                                     shardings=target)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_gc_keeps_newest(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, {"x": jnp.zeros(3)})
+    removed = ckpt.gc_old(str(tmp_path), keep=2)
+    assert len(removed) == 3
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    remaining = sorted(d for d in os.listdir(tmp_path)
+                       if d.startswith("step_"))
+    assert remaining == ["step_00000004", "step_00000005"]
+
+
+def test_async_checkpointer(tmp_path):
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = make_tree(3)
+    ac.save_async(7, tree)
+    ac.wait()
+    restored, step, _ = ckpt.restore(str(tmp_path),
+                                     jax.tree.map(np.zeros_like, tree))
+    assert step == 7
+    assert_tree_equal(tree, restored)
+
+
+def test_async_snapshot_isolated_from_mutation(tmp_path):
+    """The async save must snapshot values at call time."""
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    x = np.ones((1000, 100), np.float32)
+    tree = {"x": x}
+    ac.save_async(1, tree)
+    x *= 0.0  # mutate after snapshot
+    ac.wait()
+    restored, _, _ = ckpt.restore(str(tmp_path),
+                                  {"x": np.zeros((1000, 100), np.float32)})
+    assert np.all(np.asarray(restored["x"]) == 1.0)
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Training N steps == training k, checkpoint, restore, train N-k
+    (deterministic data pipeline + exact state checkpoint)."""
+    from repro import configs
+    from repro.models.model import Model
+    from repro.optim import (OptimizerConfig, init_train_state,
+                             make_train_step)
+    from repro.data.pipeline import DataConfig, make_source
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    model = Model(cfg)
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=2)
+    data = make_source(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4, seed=3))
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    def run(state, a, b):
+        for s in range(a, b):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+            state, m = step_fn(state, batch)
+        return state, float(m["loss"])
+
+    s0 = init_train_state(model, jax.random.key(0), opt)
+    full, loss_full = run(s0, 0, 6)
+
+    s0b = init_train_state(model, jax.random.key(0), opt)
+    mid, _ = run(s0b, 0, 3)
+    ckpt.save(str(tmp_path), 3, mid)
+    restored, step, _ = ckpt.restore(str(tmp_path), mid)
+    restored = jax.tree.map(jnp.asarray, restored)
+    resumed, loss_resumed = run(restored, 3, 6)
+    assert abs(loss_full - loss_resumed) < 1e-5
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-5, atol=2e-6),
+        full["params"], resumed["params"])

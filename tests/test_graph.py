@@ -1,0 +1,104 @@
+"""Graph IR + Eq. (3)/(4) shape inference — property-tested vs lax."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, GraphError, Node, TensorInfo, conv_output_hw
+from repro.core import onnx_lite
+from repro.core import parser
+from repro.models import cnn
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    h=st.integers(4, 64), w=st.integers(4, 64),
+    k=st.integers(1, 5), s=st.integers(1, 3),
+    p=st.integers(0, 3), d=st.integers(1, 2),
+)
+def test_eq3_matches_lax_conv_shape(h, w, k, s, p, d):
+    """Eq. (3) must agree with XLA's own convolution shape rule."""
+    if h + 2 * p < d * (k - 1) + 1 or w + 2 * p < d * (k - 1) + 1:
+        return  # degenerate: no valid output
+    ho, wo = conv_output_hw((h, w), (k, k), (s, s), (p, p, p, p), (d, d))
+    out = jax.eval_shape(
+        lambda x, wt: jax.lax.conv_general_dilated(
+            x, wt, (s, s), ((p, p), (p, p)), rhs_dilation=(d, d),
+            dimension_numbers=("NCHW", "OIHW", "NCHW")),
+        jax.ShapeDtypeStruct((1, 3, h, w), jnp.float32),
+        jax.ShapeDtypeStruct((8, 3, k, k), jnp.float32),
+    )
+    assert out.shape == (1, 8, ho, wo)
+
+
+def test_graph_toposort_and_cycle_detection():
+    nodes = [
+        Node("Relu", "r2", ["t1"], ["t2"]),
+        Node("Relu", "r1", ["x"], ["t1"]),  # out of order on purpose
+    ]
+    g = Graph("g", nodes, [TensorInfo("x", (1, 4))], ["t2"])
+    assert [n.name for n in g.nodes] == ["r1", "r2"]
+    with pytest.raises(GraphError):
+        Graph("bad", [Node("Relu", "r", ["t"], ["t"])],
+              [TensorInfo("x", (1, 4))], ["t"])
+
+
+def test_undefined_tensor_rejected():
+    with pytest.raises(GraphError):
+        Graph("g", [Node("Relu", "r", ["nope"], ["y"])],
+              [TensorInfo("x", (1, 4))], ["y"])
+
+
+def test_shape_inference_full_network():
+    g = cnn.alexnet(batch=2)
+    assert g.shape(g.outputs[0]) == (2, 1000)
+    g = cnn.vgg16(batch=1)
+    assert g.shape(g.outputs[0]) == (1, 1000)
+
+
+def test_onnx_lite_roundtrip_file(tmp_path):
+    g = cnn.tiny_cnn()
+    onnx_lite.save(g, str(tmp_path / "m"))
+    g2 = onnx_lite.load(str(tmp_path / "m"))
+    assert [n.op_type for n in g2.nodes] == [n.op_type for n in g.nodes]
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 3, 32, 32)),
+                    jnp.float32)
+    np.testing.assert_allclose(np.asarray(cnn.run_float(g, x)),
+                               np.asarray(cnn.run_float(g2, x)), rtol=1e-6)
+
+
+def test_parser_fuses_conv_relu_pool():
+    pm = parser.parse(cnn.alexnet())
+    kinds = [(l.kind, l.relu, l.pool is not None) for l in pm.layers]
+    # Fig. 6: 5 conv stages (1, 2, 5 pooled) + 3 FC stages
+    assert kinds == [
+        ("conv", True, True), ("conv", True, True), ("conv", True, False),
+        ("conv", True, False), ("conv", True, True),
+        ("fc", True, False), ("fc", True, False), ("fc", False, False),
+    ]
+    assert pm.layers[-1].softmax
+    # linked structure preserves order
+    assert pm.layers[0].next is pm.layers[1]
+    assert pm.layers[1].prev is pm.layers[0]
+
+
+def test_parser_op_counts_match_paper_tables():
+    # Table 3: 80.04 GOp/s * 18.24 ms  => ~1.46 GOp AlexNet
+    # Table 4: 151.7 GOp/s * 205 ms    => ~31.1 GOp VGG-16
+    assert abs(parser.parse(cnn.alexnet()).total_ops / 1e9 - 1.43) < 0.1
+    assert abs(parser.parse(cnn.vgg16()).total_ops / 1e9 - 30.94) < 0.5
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_divisibility_constraints_hold(data):
+    """Property (§4.2): every feasible N_i divides all c_in (beyond the
+    first layer); every feasible N_l divides all non-final c_out."""
+    pm = parser.parse(cnn.alexnet())
+    ni = data.draw(st.sampled_from(pm.feasible_ni()))
+    nl = data.draw(st.sampled_from(pm.feasible_nl()))
+    for li in pm.layers[1:]:
+        assert li.c_in % ni == 0
+    for li in pm.layers[:-1]:
+        assert li.c_out % nl == 0

@@ -1,0 +1,23 @@
+"""Multi-device distribution tests, run in a subprocess so the fake
+device count (XLA_FLAGS) can be set before jax initialises — the
+in-process suite keeps the normal 1-device view."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_multidevice_suite():
+    script = os.path.join(os.path.dirname(__file__),
+                          "multidevice_script.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    res = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=880)
+    sys.stdout.write(res.stdout)
+    sys.stderr.write(res.stderr[-4000:])
+    assert res.returncode == 0
+    assert "ALL MULTIDEVICE CHECKS PASSED" in res.stdout

@@ -1,0 +1,88 @@
+"""(N, m) fixed-point quantization properties (§4.2 Physical domain)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+
+
+@settings(max_examples=200, deadline=None)
+@given(m=st.integers(0, 12),
+       vals=st.lists(st.floats(-4, 4, allow_nan=False), min_size=1,
+                     max_size=64))
+def test_roundtrip_error_bounded_by_half_lsb(m, vals):
+    """|dequant(quant(x)) - x| <= 2^-(m+1) for in-range values."""
+    x = np.asarray(vals, np.float32)
+    in_range = np.abs(x) <= (127.0 / 2 ** m)
+    q = Q.quantize_array(x, m)
+    xd = Q.dequantize_array(q, m)
+    err = np.abs(xd - x)
+    assert np.all(err[in_range] <= 2.0 ** -(m + 1) + 1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(0, 12))
+def test_out_of_range_saturates(m):
+    big = np.asarray([1e9, -1e9], np.float32)
+    q = Q.quantize_array(big, m)
+    assert q[0] == 127 and q[1] == -128
+
+
+@settings(max_examples=100, deadline=None)
+@given(vals=st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                     max_size=64))
+def test_best_pow2_exponent_never_clips(vals):
+    x = np.asarray(vals, np.float32)
+    m = Q.best_pow2_exponent(x)
+    scaled = np.abs(x) * 2.0 ** m
+    assert np.all(scaled <= 127.0 + 1e-4)
+
+
+def test_requant_shift_definition():
+    spec = Q.QuantSpec(m_w=7, m_x=6, m_y=5)
+    assert spec.requant_shift == 8
+    with pytest.raises(ValueError):
+        _ = Q.QuantSpec(m_w=1, m_x=1, m_y=5).requant_shift
+
+
+@settings(max_examples=200, deadline=None)
+@given(acc=st.integers(-(2 ** 30), 2 ** 30), s=st.integers(1, 16))
+def test_requantize_round_half_up(acc, s):
+    """Shift-requantization == round-half-up division by 2^s, clipped."""
+    spec = Q.QuantSpec(m_w=s, m_x=0, m_y=0)
+    got = Q.requantize(np.asarray([acc]), spec)[0]
+    want = int(np.clip(np.floor((acc + 2 ** (s - 1)) / 2 ** s), -128, 127))
+    assert got == want
+
+
+def test_bias_scale_matches_accumulator():
+    """Biases quantize at 2^-(m_w+m_x) so they add into int32 acc raw."""
+    spec = Q.QuantSpec(m_w=6, m_x=4, m_y=4)
+    w = np.asarray([[0.5]], np.float32)
+    b = np.asarray([0.25], np.float32)
+    wq, bq = Q.quantize_weights(w, b, spec)
+    assert wq.dtype == np.int8 and bq.dtype == np.int32
+    assert wq[0, 0] == round(0.5 * 2 ** 6)
+    assert bq[0] == round(0.25 * 2 ** 10)
+
+
+def test_quantization_error_decreases_with_m():
+    x = np.random.default_rng(0).uniform(-0.9, 0.9, 1000).astype(np.float32)
+    errs = [Q.quantization_error(x, m) for m in range(1, 8)]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(0, 6),
+       vals=st.lists(st.floats(-2, 2, allow_nan=False), min_size=1,
+                     max_size=32))
+def test_int4_roundtrip_error_bounded(m, vals):
+    """The paper notes CNNs work at '8-bit or less': the (N, m) scheme
+    is bit-width generic — 4-bit error bound is half an LSB too."""
+    x = np.asarray(vals, np.float32)
+    in_range = np.abs(x) <= (7.0 / 2 ** m)
+    q = Q.quantize_array(x, m, bits=4)
+    xd = Q.dequantize_array(q, m)
+    err = np.abs(xd - x)
+    assert np.all(err[in_range] <= 2.0 ** -(m + 1) + 1e-6)
+    assert q.max() <= 7 and q.min() >= -8

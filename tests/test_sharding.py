@@ -1,0 +1,169 @@
+"""Sharding policy: divisibility guards, rule coverage, flash-decoding."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models.model import Model
+from repro.models import layers as L
+from repro.sharding import PolicyOptions, ShardingPolicy
+from repro.configs.base import DECODE_32K, TRAIN_4K
+
+
+def small_mesh(data=2, model=2):
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_param_specs_valid_for_all_archs(arch):
+    """Every leaf gets a spec whose sharded dims divide exactly."""
+    cfg = configs.get(arch)
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    model = Model(cfg, policy=policy)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = policy.param_specs(shapes)
+
+    def check(leaf, spec):
+        assert isinstance(spec, P)
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, shapes, specs,
+                 is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_matrix_params_are_model_sharded():
+    cfg = configs.get("qwen3-4b")
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    model = Model(cfg, policy=policy)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = policy.param_specs(shapes)
+    # attention and mlp weights must use the model axis
+    stack = specs["stack"]
+    assert tuple(stack["attn"]["wq"]) == (None, None, "model")
+    assert tuple(stack["attn"]["wo"]) == (None, "model", None)
+    assert tuple(stack["mlp"]["w_down"]) == (None, "model", None)
+    assert tuple(specs["lm_head"]) == (None, "model")
+
+
+def test_moe_experts_sharded_on_model_axis():
+    cfg = configs.get("granite-moe-1b-a400m")
+    policy = ShardingPolicy(small_mesh(), cfg)
+    model = Model(cfg, policy=policy)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = policy.param_specs(shapes)
+    assert tuple(specs["stack"]["moe"]["w_up"]) == (None, "model", None, None)
+    assert tuple(specs["stack"]["moe"]["router"])[-1] is None
+
+
+def test_indivisible_dims_stay_replicated():
+    """h2o head_dim=120-derived dims that don't divide stay unsharded."""
+    cfg = configs.get("whisper-large-v3")   # 20 heads, hd 64
+    mesh = small_mesh(2, 2)
+    policy = ShardingPolicy(mesh, cfg)
+    # a fake (20,)-dim leaf must not shard on a 2-way axis -> 20%2==0 ok;
+    # use a 5-dim leaf for the negative case
+    spec = policy._validated(P("model"), (5,))
+    if mesh.shape["model"] == 2:
+        assert tuple(spec) == (None,)
+
+
+def test_decode_cache_specs_seq_sharded():
+    cfg = configs.get("qwen2.5-32b")
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    model = Model(cfg, policy=policy)
+    specs = model.input_specs(DECODE_32K)
+    bspecs = policy.batch_specs(specs, DECODE_32K)
+    kspec = tuple(bspecs["cache"]["k"])
+    # (L, B, KV, S, hd): batch on data, seq on model
+    assert kspec[1] == "data" and kspec[3] == "model"
+
+
+def test_long500k_batch1_seq_uses_both_axes():
+    cfg = configs.get("zamba2-2.7b")
+    from repro.configs.base import LONG_500K
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    model = Model(cfg, policy=policy)
+    specs = model.input_specs(LONG_500K)
+    bspecs = policy.batch_specs(specs, LONG_500K)
+    kspec = tuple(bspecs["cache"]["attn"]["k"])
+    assert kspec[3] == ("data", "model")
+
+
+def test_sharded_decode_attention_matches_reference():
+    """shard_map flash-decoding == plain masked decode attention."""
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >=2 devices")
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = configs.get_smoke("qwen2-1.5b")
+    policy = ShardingPolicy(mesh, cfg, PolicyOptions())
+    policy._decode_seq_axes = ("model",)
+    rng = np.random.default_rng(0)
+    b, h, hkv, s, d = 2, 4, 2, 8 * n, 16
+    q = jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([s // 2, s - 3], jnp.int32)
+    with jax.set_mesh(mesh):
+        got = policy.sharded_decode_attention(q, kc, vc, lengths, None)
+    want = L.decode_attention(q, kc, vc, lengths, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_decode_attention_with_window():
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >=2 devices")
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = configs.get_smoke("h2o-danube-3-4b")
+    policy = ShardingPolicy(mesh, cfg, PolicyOptions())
+    policy._decode_seq_axes = ("model",)
+    rng = np.random.default_rng(1)
+    b, h, hkv, s, d = 2, 4, 2, 8 * n, 16
+    q = jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([s - 1, s // 2], jnp.int32)
+    with jax.set_mesh(mesh):
+        got = policy.sharded_decode_attention(q, kc, vc, lengths, 6)
+    want = L.decode_attention(q, kc, vc, lengths, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zero1_optimizer_spec():
+    cfg = configs.get("qwen2-1.5b")
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    spec = policy.optimizer_spec(P(None, "model"), (8960, 1536))
+    # first replicated divisible dim picks up the data axis
+    assert tuple(spec) == ("data", "model")
+
+
+def test_policy_act_constraint_applies():
+    cfg = configs.get_smoke("qwen2-1.5b")
+    mesh = small_mesh()
+    policy = ShardingPolicy(mesh, cfg)
+    dp = mesh.shape["data"]
+    with jax.set_mesh(mesh):
+        x = jnp.zeros((2 * dp, 4, 8))
+        y = jax.jit(policy.act)(x)
+    assert y.shape == x.shape
