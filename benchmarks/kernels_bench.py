@@ -31,6 +31,12 @@ def run() -> None:
                                 relu=True, pool=(2, 2), interpret=True))
     emit("kernels/qconv_32x32x16->32", us, "fused conv+relu+maxpool")
 
+    # row-band tiled variant: same op, line-buffer-sized working set
+    us = timeit(lambda: qconv2d(xc, wc, None, strides=(1, 1), shift=8,
+                                relu=True, pool=(2, 2), block_h=4,
+                                interpret=True))
+    emit("kernels/qconv_32x32x16->32_bh4", us, "row-band block_h=4")
+
     # flash attention
     q = jnp.asarray(RNG.standard_normal((1, 4, 256, 64)), jnp.float32)
     kv = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)

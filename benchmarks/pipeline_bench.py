@@ -1,0 +1,101 @@
+"""End-to-end int8 executor benchmark (interpret mode on CPU).
+
+Times the whole-network fused NHWC executor against a seed-equivalent
+per-layer NCHW path (transposes around every stage, Python layer loop
+re-dispatched per call) on tiny_cnn, plus the fused executor alone at
+AlexNet scale.  Writes before/after JSON to ``results/pipeline_bench.json``
+so this and future perf PRs have a trajectory.  Interpret-mode numbers
+are functional-path timings, NOT TPU performance — the point is the
+relative cost of the executor dataflow (layout round-trips + per-layer
+dispatch vs one fused jit), which exists on every backend.
+"""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import parser as P
+from repro.core import pipeline as pipe
+from repro.core.synthesis import CNN2Gate
+from repro.kernels import ops
+from repro.models import cnn
+from .common import emit, timeit
+
+RNG = np.random.default_rng(0)
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "pipeline_bench.json")
+
+
+def _layerwise_nchw(qm: pipe.QuantizedModel, x_float: jnp.ndarray):
+    """Seed-equivalent executor: NCHW activations, per-layer transposes,
+    Python dispatch on every call (the pre-row-band baseline)."""
+    h = jnp.clip(jnp.round(x_float * 2.0 ** qm.input_m),
+                 -128, 127).astype(jnp.int8)
+    for ql in qm.layers:
+        li = ql.info
+        if li.kind == P.CONV:
+            pool = None
+            if li.pool is not None:
+                pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+            w_oihw = jnp.transpose(ql.w_q, (3, 2, 0, 1))  # undo staging
+            h = ops.qconv2d_nchw(h, w_oihw, ql.b_q, strides=li.strides,
+                                 pads=li.pads, shift=ql.spec.requant_shift,
+                                 relu=li.relu, pool=pool, interpret=True)
+        elif li.kind == P.POOL:
+            fn = (ops.avgpool2d_nchw if li.pool_type == "avg"
+                  else ops.maxpool2d_nchw)
+            h = fn(h, li.kernel_shape[0], li.strides[0], li.pads)
+        elif li.kind == P.FC:
+            if h.ndim > 2:
+                h = jnp.transpose(h, (0, 2, 3, 1)).reshape(h.shape[0], -1)
+            h = ops.qgemm(h, ql.w_q, ql.b_q, shift=ql.spec.requant_shift,
+                          relu=li.relu, interpret=True)
+    return h.astype(jnp.float32) * (2.0 ** -qm.output_m)
+
+
+def run() -> None:
+    results = {}
+
+    # tiny_cnn at two operating points: 16x16/batch-2 is the
+    # dispatch/layout-bound regime where the executor dataflow dominates
+    # the timing; 32x32/batch-4 is emulation-compute-bound (the fused
+    # win there is HBM traffic, which interpret mode cannot see).
+    for tag, in_hw, batch in (("tiny_cnn_16", 16, 2), ("tiny_cnn", 32, 4)):
+        gate = CNN2Gate.from_graph(cnn.tiny_cnn(batch=batch, in_hw=in_hw))
+        x = (RNG.standard_normal((batch, 3, in_hw, in_hw)) * 0.5
+             ).astype(np.float32)
+        gate.calibrate_quantization(x)
+        xj = jnp.asarray(x)
+        qm = gate.quantized
+
+        fused = gate.build("emulation")
+        us_fused = timeit(lambda: fused(xj), warmup=2, iters=9)
+        emit(f"pipeline/{tag}_fused", us_fused, "NHWC end-to-end, one jit")
+
+        us_layer = timeit(lambda: _layerwise_nchw(qm, xj),
+                          warmup=2, iters=9)
+        emit(f"pipeline/{tag}_layerwise", us_layer,
+             "seed executor: per-layer NCHW round-trips")
+        results[tag] = {
+            "batch": batch, "in_hw": in_hw,
+            "fused_us": us_fused, "layerwise_us": us_layer,
+            "speedup": us_layer / max(us_fused, 1e-9),
+        }
+
+    # -------------------------------- AlexNet-scale fused (batch 1)
+    gate_a = CNN2Gate.from_graph(cnn.alexnet(channels_base=16,
+                                             num_classes=100))
+    xa = (RNG.standard_normal((1, 3, 224, 224)) * 0.5).astype(np.float32)
+    gate_a.calibrate_quantization(xa)
+    fused_a = gate_a.build("emulation", block_h=8)
+    xaj = jnp.asarray(xa)
+    us_a = timeit(fused_a, xaj, warmup=1, iters=3)
+    emit("pipeline/alexnet16_fused_bh8", us_a,
+         "row-band block_h=8, 224x224 ingress")
+    results["alexnet_cb16"] = {"batch": 1, "fused_us": us_a, "block_h": 8}
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(results, f, indent=1)

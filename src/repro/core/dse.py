@@ -57,6 +57,11 @@ class DesignSpace:
     def axes(self) -> List[List]:
         raise NotImplementedError
 
+    def axis_names(self) -> List[str]:
+        """Human-readable names for the option tuple's positions
+        (reports, CLI output)."""
+        return [f"axis{i}" for i in range(len(self.axes()))]
+
     def tiebreak(self, option: Tuple) -> float:
         """Secondary score among options with equal F_avg.  The CNN space
         prefers *balanced* (N_i, N_l): the memory-read kernel's delivery
@@ -144,7 +149,8 @@ def rl_dse(space: DesignSpace,
     dims = [len(a) for a in axes]
     n_actions = 3  # ++axis0 | ++axis1 | ++both   (paper's action set)
     if len(axes) != 2:
-        # generalised: ++axis_i for each axis, plus ++all
+        # generalised: ++axis_i for each axis, plus ++all (e.g. the CNN
+        # space's third block_h row-band axis, DESIGN.md §4)
         n_actions = len(axes) + 1
     q = np.zeros(dims + [n_actions], np.float64)
     rng = np.random.default_rng(seed)

@@ -4,14 +4,23 @@ Takes a parsed model + per-layer (N, m) quantization specs, quantizes
 weights/biases once, and runs inference by streaming each pipeline stage
 through the fused Pallas kernels (conv+ReLU+pool on the conv kernel, FC
 on the same matrix unit with pooling configured pass-through — §5).
-Activation tensors move between stages as int8 at the per-layer
-fixed-point scale, mirroring the OpenCL pipes' int8 payload.
+
+The executor is **whole-network fused** (DESIGN.md §3): activations
+stay NHWC int8 from ingress to egress — one NCHW->NHWC conversion when
+the float input is quantized, one back only if the network ends in a
+spatial stage — and every layer's weights are pre-staged into the
+kernel-native layout once at :func:`build_quantized` time (conv OIHW ->
+HWIO; FC rows permuted so flattening an NHWC activation hits the same
+features the NCHW-trained weights expect).  :func:`make_executor`
+closes the whole layer program over one ``jax.jit``, so steady-state
+calls re-enter a single compiled executable instead of re-dispatching
+the Python layer loop — the TPU analogue of the paper's host program
+enqueueing one fused command queue.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,9 @@ from .quantize import QuantSpec, quantize_weights
 
 @dataclasses.dataclass
 class QuantizedLayer:
+    """One stage with weights staged in the kernel-native layout:
+    conv -> HWIO int8, FC -> (K, N) int8 in NHWC-flatten row order."""
+
     info: P.LayerInfo
     spec: QuantSpec
     w_q: Optional[jnp.ndarray]
@@ -39,17 +51,39 @@ class QuantizedModel:
     input_m: int          # fixed-point exponent of the network input
     output_m: int
     parsed: P.ParsedModel
+    _executors: Dict[Tuple, Callable] = dataclasses.field(
+        default_factory=dict, repr=False)
 
     @property
     def hardware_options(self):
         return self.parsed.hardware_options
 
 
+def _stage_weights(li: P.LayerInfo, prev: Optional[P.LayerInfo],
+                   w_q: np.ndarray) -> np.ndarray:
+    """One-time layout staging (ingress-side, never per inference):
+    conv OIHW -> HWIO; FC weight rows reordered from the exporter's
+    NCHW-flatten order (c, h, w) to the executor's NHWC-flatten order
+    (h, w, c) when the FC consumes a flattened spatial tensor."""
+    if li.kind == P.CONV:
+        return np.transpose(w_q, (2, 3, 1, 0))
+    if li.kind == P.FC and prev is not None and len(prev.out_shape) == 4:
+        _n, c, h, w = prev.out_shape
+        k, n_out = w_q.shape
+        if k == c * h * w:
+            return (w_q.reshape(c, h, w, n_out)
+                    .transpose(1, 2, 0, 3)
+                    .reshape(k, n_out))
+    return w_q
+
+
 def build_quantized(model: P.ParsedModel,
                     specs: Dict[str, QuantSpec]) -> QuantizedModel:
     """Apply the user-given (N, m) pairs (the paper: CNN2Gate does not
-    *perform* quantization, it *applies* provided values)."""
+    *perform* quantization, it *applies* provided values) and stage all
+    weights into the kernel-native layouts."""
     layers: List[QuantizedLayer] = []
+    prev_info: Optional[P.LayerInfo] = None
     for li in model.layers:
         # pool stages carry no weights: int8 passes through at the
         # incoming fixed-point scale (no spec, no requant)
@@ -59,9 +93,10 @@ def build_quantized(model: P.ParsedModel,
         w_q, b_q = (None, None)
         if w is not None:
             w_q, b_q = quantize_weights(w, b, spec)
-            w_q = jnp.asarray(w_q)
+            w_q = jnp.asarray(_stage_weights(li, prev_info, w_q))
             b_q = jnp.asarray(b_q) if b_q is not None else None
         layers.append(QuantizedLayer(li, spec, w_q, b_q))
+        prev_info = li
     return QuantizedModel(
         name=model.name,
         layers=layers,
@@ -71,51 +106,80 @@ def build_quantized(model: P.ParsedModel,
     )
 
 
+def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
+                  block_h: Optional[int] = None,
+                  interpret: Optional[bool] = None
+                  ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build the whole-network fused executor: ONE jitted closure over
+    the staged layer list.  ``x_float`` is the NCHW float input; the
+    result is float logits (dequantized with the final layer's m_y).
+
+    (N_i, N_l, block_h) select kernel tile shapes: N_l lanes ->
+    output-channel tile (x8: eight 8-bit MACs per lane-vector element
+    feed one MXU row), N_i -> contraction granularity, block_h -> the
+    conv kernel's row-band height (the line-buffer depth of DESIGN.md
+    §2).  Functionally the result is identical for every option —
+    options trade resources for speed, exactly as in the paper.
+    """
+    block_cout = max(8 * n_l, 8)
+    last = qm.layers[-1].info
+
+    def forward(x_float: jnp.ndarray) -> jnp.ndarray:
+        scale = 2.0 ** qm.input_m
+        h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
+        if h.ndim == 4:
+            h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
+        for ql in qm.layers:
+            li = ql.info
+            if li.kind == P.CONV:
+                pool = None
+                if li.pool is not None:
+                    pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+                h = ops.qconv2d_nhwc(
+                    h, ql.w_q, ql.b_q,
+                    strides=li.strides, pads=li.pads,
+                    shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
+                    block_cout=block_cout, block_h=block_h,
+                    interpret=interpret)
+            elif li.kind == P.POOL:
+                pool_fn = (ops.avgpool2d_nhwc if li.pool_type == "avg"
+                           else ops.maxpool2d_nhwc)
+                h = pool_fn(h, li.kernel_shape[0], li.strides[0], li.pads)
+            elif li.kind == P.FC:
+                if h.ndim > 2:
+                    # NHWC flatten: rows were permuted at staging time
+                    h = h.reshape(h.shape[0], -1)
+                h = ops.qgemm(h, ql.w_q, ql.b_q,
+                              shift=ql.spec.requant_shift,
+                              relu=li.relu,
+                              block_n=min(128, max(8 * n_l, 8)),
+                              block_k=128,
+                              interpret=interpret)
+            else:  # pragma: no cover - parser only emits the three kinds
+                raise ValueError(li.kind)
+        if h.ndim == 4:
+            h = jnp.transpose(h, (0, 3, 1, 2))      # single egress NHWC->NCHW
+        logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
+        if last.softmax:
+            logits = jax.nn.softmax(logits, axis=-1)
+        return logits
+
+    return jax.jit(forward)
+
+
 def run_int8(qm: QuantizedModel, x_float: jnp.ndarray,
              n_i: int = 16, n_l: int = 32,
-             interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Full pipelined inference.  ``x_float`` is the NCHW float input;
-    returns float logits (dequantized with the final layer's m_y).
-
-    (N_i, N_l) select kernel block shapes: N_l lanes -> output-channel
-    tile (x8: eight 8-bit MACs per lane-vector element feed one MXU
-    row), N_i -> contraction granularity.  Functionally the result is
-    identical for every option — options trade resources for speed,
-    exactly as in the paper.
-    """
-    scale = 2.0 ** qm.input_m
-    h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
-    block_cout = max(8 * n_l, 8)
-    for ql in qm.layers:
-        li = ql.info
-        if li.kind == P.CONV:
-            pool = None
-            if li.pool is not None:
-                pool = (li.pool.kernel_shape[0], li.pool.strides[0])
-            h = ops.qconv2d_nchw(
-                h, ql.w_q, ql.b_q,
-                strides=li.strides, pads=li.pads,
-                shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
-                block_cout=block_cout, interpret=interpret)
-        elif li.kind == P.POOL:
-            pool_fn = (ops.avgpool2d_nchw if li.pool_type == "avg"
-                       else ops.maxpool2d_nchw)
-            h = pool_fn(h, li.kernel_shape[0], li.strides[0], li.pads)
-        elif li.kind == P.FC:
-            if h.ndim > 2:
-                h = h.reshape(h.shape[0], -1)
-            h = ops.qgemm(h, ql.w_q, ql.b_q, shift=ql.spec.requant_shift,
-                          relu=li.relu,
-                          block_n=min(128, max(8 * n_l, 8)),
-                          block_k=128,
-                          interpret=interpret)
-        else:  # pragma: no cover - parser only emits the three kinds
-            raise ValueError(li.kind)
-    logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
-    last = qm.layers[-1].info
-    if last.softmax:
-        logits = jax.nn.softmax(logits, axis=-1)
-    return logits
+             interpret: Optional[bool] = None,
+             block_h: Optional[int] = None) -> jnp.ndarray:
+    """Full pipelined inference through the fused executor.  Executors
+    are cached per (N_i, N_l, block_h, interpret) on the model, so
+    repeated calls hit the same compiled program."""
+    key = (n_i, n_l, block_h, interpret)
+    ex = qm._executors.get(key)
+    if ex is None:
+        ex = qm._executors[key] = make_executor(
+            qm, n_i, n_l, block_h=block_h, interpret=interpret)
+    return ex(x_float)
 
 
 def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:

@@ -106,6 +106,48 @@ def estimate_fpga(profile: FPGAProfile, n_i: int, n_l: int,
     return ResourceReport(percents=percents, raw=raw, fits=fits)
 
 
+# --------------------------------------------- row-band working-set model
+
+#: Per-core VMEM the conv kernel's row-band working set must fit in on a
+#: real TPU (the Mosaic double-buffering budget; the ~16 MiB/core figure
+#: of the Pallas guide).  The FPGA boards use their published on-chip
+#: ``mem_bits`` instead.
+VMEM_BUDGET_BYTES = 16 * 1024 ** 2
+
+
+def conv_band_working_set(layers, n_l: int,
+                          block_h: Optional[int]) -> int:
+    """Peak per-grid-step VMEM bytes of the row-tiled conv kernel across
+    the model's conv layers (the quantity the DSE must keep under the
+    on-chip budget — the paper's line-buffer/block-RAM sizing, §3.2.2).
+
+    ``layers`` is the parsed ``LayerInfo`` list; ``n_l`` maps to the
+    output-channel tile exactly as the executor maps it
+    (``block_cout = 8 * N_l``); ``block_h=None`` scores the untiled
+    whole-plane kernel."""
+    from repro.kernels import qconv  # kernels never import core: no cycle
+
+    block_cout = max(8 * n_l, 8)
+    peak = 0
+    for li in layers:
+        if li.kind != "conv":
+            continue
+        _n, cin, h, w = li.in_shape
+        pads = li.pads
+        hp, wp = h + pads[0] + pads[2], w + pads[1] + pads[3]
+        kh, kw = li.kernel_shape
+        sh, sw = li.strides
+        _n2, cout, oh, ow = li.out_shape
+        pool = None
+        if li.pool is not None:
+            pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+        bco = min(block_cout, -(-cout // 128) * 128)
+        peak = max(peak, qconv.vmem_bytes(
+            hp, wp, cin, kh, kw, bco, oh, ow,
+            sh=sh, sw=sw, block_h=block_h, pool=pool))
+    return peak
+
+
 # ------------------------------------------------------------------- TPU
 
 @dataclasses.dataclass(frozen=True)

@@ -17,40 +17,77 @@ from typing import Any, Dict, List, Optional, Tuple
 from .dse import DesignSpace
 from .parser import ParsedModel
 from .resources import (FPGAProfile, ResourceReport, TPU_V5E, NI_CAP,
-                        NL_CAP, estimate_fpga)
+                        NL_CAP, conv_band_working_set, estimate_fpga)
+
+#: Default row-band heights offered to the DSE when the caller enables
+#: the third axis but does not name candidates.
+DEFAULT_BLOCK_H_OPTIONS: List[int] = [4, 8, 16, 32]
 
 
 class CNNDesignSpace(DesignSpace):
-    """The paper's (N_i, N_l) space for a parsed CNN on a given board.
+    """The paper's (N_i, N_l) space for a parsed CNN on a given board,
+    optionally extended with the conv kernel's ``block_h`` row-band
+    height as a third axis (DESIGN.md §4).
 
     Options obey the §4.2 divisibility constraints (from the parsed
     model) and the framework caps (N_i <= 16 from the 128-bit DDR burst,
     N_l <= 32 from the pipe width — the paper's 'limited options'
     discussion in §5).  ``evaluate`` calls the calibrated analytical
-    stand-in for the vendor compiler.
+    stand-in for the vendor compiler; in the 3-axis space it adds the
+    row-band working set (``conv_band_working_set``) against the
+    board's on-chip memory, so options whose band does not fit are
+    rejected exactly like any over-quota option in Algorithm 1.
     """
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,
-                 ni_cap: int = NI_CAP, nl_cap: int = NL_CAP):
+                 ni_cap: int = NI_CAP, nl_cap: int = NL_CAP,
+                 block_h_options: Optional[List[int]] = None):
         self.model = model
         self.board = board
         self._ni = [n for n in model.feasible_ni(ni_cap) if n <= ni_cap]
         self._nl = [n for n in model.feasible_nl(nl_cap) if n <= nl_cap]
+        self._bh = sorted(block_h_options) if block_h_options else None
         self.weight_bytes = model.total_weights  # int8: 1 byte/weight
 
-    def options(self) -> List[Tuple[int, int]]:
-        return [(ni, nl) for ni in self._ni for nl in self._nl]
+    def options(self) -> List[Tuple]:
+        if self._bh is None:
+            return [(ni, nl) for ni in self._ni for nl in self._nl]
+        return [(ni, nl, bh) for ni in self._ni for nl in self._nl
+                for bh in self._bh]
 
     def axes(self) -> List[List[int]]:
-        return [list(self._ni), list(self._nl)]
+        axes = [list(self._ni), list(self._nl)]
+        if self._bh is not None:
+            axes.append(list(self._bh))
+        return axes
 
-    def evaluate(self, option: Tuple[int, int]) -> ResourceReport:
-        ni, nl = option
-        return estimate_fpga(self.board, ni, nl, self.weight_bytes)
+    def axis_names(self) -> List[str]:
+        names = ["n_i", "n_l"]
+        if self._bh is not None:
+            names.append("block_h")
+        return names
 
-    def tiebreak(self, option: Tuple[int, int]) -> float:
-        # prefer balanced (N_i, N_l) — see DesignSpace.tiebreak docstring
-        return float(min(option))
+    def evaluate(self, option: Tuple) -> ResourceReport:
+        ni, nl = option[0], option[1]
+        rep = estimate_fpga(self.board, ni, nl, self.weight_bytes)
+        if self._bh is None:
+            return rep
+        band_bytes = conv_band_working_set(self.model.layers, nl, option[2])
+        band_pct = 100.0 * (8 * band_bytes) / self.board.mem_bits
+        percents = dict(rep.percents)
+        percents["mem"] = max(percents["mem"], band_pct)
+        raw = dict(rep.raw, band_ws_bytes=band_bytes, band_ws_pct=band_pct)
+        fits = all(v <= 100.0 for v in percents.values())
+        return ResourceReport(percents=percents, raw=raw, fits=fits)
+
+    def tiebreak(self, option: Tuple) -> float:
+        # prefer balanced (N_i, N_l) — see DesignSpace.tiebreak
+        # docstring; among those, deeper row bands (larger block_h =
+        # fewer halo re-reads) break remaining ties
+        t = float(min(option[0], option[1]))
+        if len(option) > 2:
+            t += option[2] * 1e-3
+        return t
 
 
 DEFAULT_POD_AXES: List[Tuple[str, List]] = [
@@ -90,6 +127,9 @@ class ShardingSpace(DesignSpace):
 
     def axes(self) -> List[List]:
         return [vals for _n, vals in self._axes]
+
+    def axis_names(self) -> List[str]:
+        return [name for name, _vals in self._axes]
 
     def options(self) -> List[Tuple]:
         import itertools

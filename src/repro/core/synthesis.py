@@ -118,13 +118,22 @@ class CNN2Gate:
         return specs
 
     # ---------------------------------------------------------------- DSE
-    def design_space(self, board: str) -> CNNDesignSpace:
-        return CNNDesignSpace(self.parsed, FPGA_BOARDS[board])
+    def design_space(self, board: str,
+                     block_h_options: Optional[List[int]] = None
+                     ) -> CNNDesignSpace:
+        return CNNDesignSpace(self.parsed, FPGA_BOARDS[board],
+                              block_h_options=block_h_options)
 
     def explore(self, board: str, algo: str = "rl",
                 thresholds: Optional[Dict[str, float]] = None,
-                eval_cost_s: float = 0.0, **kw) -> dse_mod.DSEResult:
-        space = self.design_space(board)
+                eval_cost_s: float = 0.0,
+                block_h_options: Optional[List[int]] = None,
+                **kw) -> dse_mod.DSEResult:
+        """Hardware-aware DSE.  With ``block_h_options`` the space grows
+        a third axis — the conv kernel's row-band height — and options
+        whose row-band working set exceeds the on-chip budget are
+        rejected by the resource model (DESIGN.md §4)."""
+        space = self.design_space(board, block_h_options=block_h_options)
         if algo == "bf":
             return dse_mod.brute_force(space, thresholds, eval_cost_s)
         if algo == "rl":
@@ -133,9 +142,11 @@ class CNN2Gate:
         raise ValueError(f"unknown DSE algorithm {algo!r}")
 
     # -------------------------------------------------------------- build
-    def build(self, mode: str = "emulation", n_i: int = 16, n_l: int = 32
+    def build(self, mode: str = "emulation", n_i: int = 16, n_l: int = 32,
+              block_h: Optional[int] = None
               ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-        """Return a callable running the int8 pipeline.
+        """Return the whole-network fused executor: ONE jitted closure
+        over the staged layer list (no per-call Python layer dispatch).
 
         emulation: interpret-mode kernels (fast CPU verify).
         fullflow : AOT-compiled executable for the default backend (the
@@ -146,14 +157,12 @@ class CNN2Gate:
                                "calibrate_quantization() first")
         qm = self.quantized
         if mode == "emulation":
-            return lambda x: pipe.run_int8(qm, x, n_i, n_l, interpret=True)
+            return pipe.make_executor(qm, n_i, n_l, block_h=block_h,
+                                      interpret=True)
         if mode == "fullflow":
             interpret = jax.default_backend() != "tpu"
-
-            def fn(x):
-                return pipe.run_int8(qm, x, n_i, n_l, interpret=interpret)
-
-            jitted = jax.jit(fn)
+            jitted = pipe.make_executor(qm, n_i, n_l, block_h=block_h,
+                                        interpret=interpret)
             sample = jnp.zeros((1,) + self.parsed.input_shape[1:], jnp.float32)
             t0 = time.perf_counter()
             compiled = jitted.lower(sample).compile()  # the "synthesis"

@@ -1,15 +1,23 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-Handles layout conversion from the ONNX-lite world (NCHW / OIHW) to the
-TPU-native layouts the kernels use (NHWC / HWIO), zero-padding for
-convolution pads (zero == symmetric quantization zero-point), and the
+Two families of entry points (see DESIGN.md §3):
+
+  * ``*_nhwc`` — TPU-native layouts (NHWC activations, HWIO weights).
+    These are what the whole-network fused executor calls: activations
+    stay NHWC int8 from network ingress to egress, so no per-layer
+    transposes ever reach XLA.
+  * ``*_nchw`` — ONNX-layout compatibility wrappers (NCHW / OIHW) that
+    transpose around the NHWC paths.  Kept for direct callers and
+    layout-parity tests; the executor does not use them.
+
+The wrappers also handle zero-padding for convolution pads (zero ==
+symmetric quantization zero-point; max-pool pads with INT8_MIN) and the
 interpret-mode switch: on this CPU container every kernel runs with
 ``interpret=True`` (Python-evaluated, bit-exact semantics); on a real
 TPU the same calls lower to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -34,6 +42,63 @@ def qgemm(x, w, b=None, *, shift: int, relu: bool = False,
                         block_n=block_n, block_k=block_k, interpret=interpret)
 
 
+# ------------------------------------------------------ NHWC-native paths
+
+def qconv2d_nhwc(
+    x: jnp.ndarray,  # (N, H, W, Cin) int8, unpadded
+    w: jnp.ndarray,  # (KH, KW, Cin, Cout) int8 (HWIO)
+    b: Optional[jnp.ndarray],
+    *,
+    strides: Tuple[int, int] = (1, 1),
+    pads: Tuple[int, int, int, int] = (0, 0, 0, 0),
+    shift: int = 0,
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,
+    block_cout: int = 128,
+    block_h: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """TPU-layout entry point for the fused conv+ReLU+pool row-band
+    kernel.  Returns NHWC int8 (post-pool when ``pool`` is given)."""
+    interpret = default_interpret() if interpret is None else interpret
+    if any(pads):
+        x = jnp.pad(x, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]),
+                        (0, 0)))
+    return _qconv.qconv2d(x, w, b, strides=strides, shift=shift, relu=relu,
+                          pool=pool, block_cout=block_cout, block_h=block_h,
+                          interpret=interpret)
+
+
+def maxpool2d_nhwc(x: jnp.ndarray, window: int, stride: int,
+                   pads: Tuple[int, int, int, int] = (0, 0, 0, 0)
+                   ) -> jnp.ndarray:
+    """Standalone int8-native NHWC max-pool (pools not fused behind a
+    conv).  Stays in the executor's no-transpose NHWC dataflow; the
+    reduction runs directly on int8 (identity = INT8_MIN)."""
+    return jax.lax.reduce_window(
+        x, jnp.int8(ref.INT8_MIN), jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1),
+        ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)))
+
+
+def avgpool2d_nhwc(x: jnp.ndarray, window: int, stride: int,
+                   pads: Tuple[int, int, int, int] = (0, 0, 0, 0)
+                   ) -> jnp.ndarray:
+    """Standalone int8-native NHWC average-pool (AveragePool /
+    GlobalAveragePool): int32 window sum, round-half-up divide — the
+    fixed-point scale is unchanged, so the result feeds the next int8
+    stage directly."""
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1),
+        ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)))
+    count = window * window
+    q = jnp.floor_divide(summed + count // 2, count)
+    return jnp.clip(q, ref.INT8_MIN, ref.INT8_MAX).astype(jnp.int8)
+
+
+# -------------------------------------- ONNX-layout (NCHW) compatibility
+
 def qconv2d_nchw(
     x: jnp.ndarray,  # (N, Cin, H, W) int8
     w: jnp.ndarray,  # (Cout, Cin, KH, KW) int8 (OIHW, ONNX layout)
@@ -45,39 +110,33 @@ def qconv2d_nchw(
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     block_cout: int = 128,
+    block_h: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """ONNX-layout entry point for the fused conv+ReLU+pool kernel.
-    Returns NCHW int8 (post-pool when ``pool`` is given)."""
-    interpret = default_interpret() if interpret is None else interpret
+    """ONNX-layout wrapper around :func:`qconv2d_nhwc`.  Returns NCHW
+    int8 (post-pool when ``pool`` is given)."""
     xh = jnp.transpose(x, (0, 2, 3, 1))          # NHWC
-    xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)))
     wh = jnp.transpose(w, (2, 3, 1, 0))          # HWIO
-    y = _qconv.qconv2d(xh, wh, b, strides=strides, shift=shift, relu=relu,
-                       pool=pool, block_cout=block_cout, interpret=interpret)
+    y = qconv2d_nhwc(xh, wh, b, strides=strides, pads=pads, shift=shift,
+                     relu=relu, pool=pool, block_cout=block_cout,
+                     block_h=block_h, interpret=interpret)
     return jnp.transpose(y, (0, 3, 1, 2))
 
 
 def maxpool2d_nchw(x: jnp.ndarray, window: int, stride: int,
                    pads: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> jnp.ndarray:
-    """Standalone int8 max-pool (for pools not fused behind a conv)."""
+    """ONNX-layout wrapper around :func:`maxpool2d_nhwc`."""
     xh = jnp.transpose(x, (0, 2, 3, 1))
-    if any(pads):
-        xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)),
-                     constant_values=ref.INT8_MIN)
-    y = ref.maxpool2d_ref(xh, window, stride)
-    return jnp.transpose(y, (0, 3, 1, 2))
+    return jnp.transpose(maxpool2d_nhwc(xh, window, stride, pads),
+                         (0, 3, 1, 2))
 
 
 def avgpool2d_nchw(x: jnp.ndarray, window: int, stride: int,
                    pads: Tuple[int, int, int, int] = (0, 0, 0, 0)) -> jnp.ndarray:
-    """Standalone int8 average-pool (AveragePool / GlobalAveragePool)."""
+    """ONNX-layout wrapper around :func:`avgpool2d_nhwc`."""
     xh = jnp.transpose(x, (0, 2, 3, 1))
-    if any(pads):
-        xh = jnp.pad(xh, ((0, 0), (pads[0], pads[2]),
-                          (pads[1], pads[3]), (0, 0)))
-    y = ref.avgpool2d_ref(xh, window, stride)
-    return jnp.transpose(y, (0, 3, 1, 2))
+    return jnp.transpose(avgpool2d_nhwc(xh, window, stride, pads),
+                         (0, 3, 1, 2))
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -8,15 +8,27 @@ inside ONE kernel (fusion = pipes: the intermediate feature map never
 round-trips through HBM) and expresses the convolution as kh*kw
 shifted int8 matmuls on the MXU (im2col-free sliced dot products).
 
-Parallelism parameters map exactly onto the paper's degrees of freedom:
+Parallelism parameters map onto the paper's degrees of freedom
+(DESIGN.md §2 table):
   * ``N_l`` (compute lanes)      -> ``block_cout`` (output-channel tile)
   * ``N_i`` (input vector width) -> the Cin contraction width (whole Cin
     per dot here; the DSE scores VMEM pressure of both).
+  * line-buffer depth            -> ``block_h`` (row-band tile)
 
-Grid: (batch, Cout/block_cout).  Each step loads the full (padded)
-input plane (int8 HxWxCin — e.g. 224x224x64 = 3.2 MiB, comfortably
-inside the ~16 MiB VMEM budget for every AlexNet/VGG layer) plus one
-weight tile (KH, KW, Cin, block_cout).
+Grid: ``(batch, H/block_h, Cout/block_cout)``, iterated with the
+output-channel tile innermost.  Each step sees one **row band** of the
+input — ``block_h`` output rows plus the halo the band needs (kh-1 conv
+rows, and when a max-pool is fused, the pool-window carry rows, so the
+fused pool stays bit-exact across band boundaries).  The band window
+*overlaps* its neighbours by the halo, which a blocked BlockSpec cannot
+express; the input spec therefore uses unblocked (element-offset)
+indexing.  Because the input index map ignores the Cout grid axis, the
+band stays resident in VMEM while the weight tiles cycle — the old
+whole-plane kernel re-fetched the entire input per Cout tile.  The
+int32 accumulator lives in explicit VMEM scratch, and
+``dimension_semantics`` tells Mosaic the batch/band axes are parallel
+so it double-buffers the next band's DMA behind the current band's
+matmuls.
 """
 from __future__ import annotations
 
@@ -26,30 +38,32 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 INT8_MIN, INT8_MAX = -128, 127
 
 
-def _qconv_kernel(
-    x_ref,   # (1, Hp, Wp, Cin) int8 (pre-padded)
-    w_ref,   # (KH, KW, Cin, bco) int8
-    b_ref,   # (1, bco) int32
-    o_ref,   # (1, Ho', Wo', bco) int8 (post-pool if fused)
+def _qconv_band_kernel(
+    x_ref,    # (1, band_in_rows, Wp, Cin) int8 — overlapping halo band
+    w_ref,    # (KH, KW, Cin, bco) int8
+    b_ref,    # (1, bco) int32
+    o_ref,    # (1, block_h, Wo', bco) int8 (post-pool if fused)
+    acc_ref,  # VMEM scratch: (conv_rows * wo, bco) int32
     *,
     strides: Tuple[int, int],
-    out_hw: Tuple[int, int],
+    conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
 ):
-    x = x_ref[0]                      # (Hp, Wp, Cin)
+    x = x_ref[0]                      # (band_in_rows, Wp, Cin)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
     cin = x.shape[-1]
     bco = o_ref.shape[-1]
-    ho, wo = out_hw
+    ho, wo = conv_hw
     sh, sw = strides
 
-    acc = jnp.zeros((ho * wo, bco), jnp.int32)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
     for i in range(kh):              # static unroll: kh*kw MXU matmuls
         for j in range(kw):
             patch = jax.lax.slice(
@@ -58,13 +72,13 @@ def _qconv_kernel(
                 (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
                 (sh, sw, 1),
             )                         # (ho, wo, cin) int8
-            acc += jnp.dot(
+            acc_ref[...] += jnp.dot(
                 patch.reshape(ho * wo, cin),
                 w_ref[i, j],
                 preferred_element_type=jnp.int32,
             )
 
-    acc = acc + b_ref[...].astype(jnp.int32)  # (1,bco) broadcasts
+    acc = acc_ref[...] + b_ref[...].astype(jnp.int32)  # (1,bco) broadcasts
     if shift > 0:
         acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
     if relu:
@@ -89,9 +103,45 @@ def _qconv_kernel(
     o_ref[0] = y
 
 
+def band_geometry(block_h: int, kh: int, sh: int,
+                  pool: Optional[Tuple[int, int]]) -> Tuple[int, int, int]:
+    """Row-band halo arithmetic shared by the kernel and the DSE
+    resource model.
+
+    For a band of ``block_h`` *final* output rows (post-pool when a pool
+    is fused) returns ``(conv_rows, in_rows, in_step)``:
+
+      conv_rows — conv output rows the band must compute
+                  (= ``(block_h-1)*ps + pw`` with a fused pool: the last
+                  pool window carries ``pw-ps`` rows past the stride);
+      in_rows   — input rows the band must read (conv halo ``kh-1``);
+      in_step   — input-row distance between consecutive band starts
+                  (< in_rows: the difference is the halo overlap).
+    """
+    if pool is not None:
+        pw, ps = pool
+        conv_rows = (block_h - 1) * ps + pw
+        conv_step = block_h * ps
+    else:
+        conv_rows = block_h
+        conv_step = block_h
+    in_rows = (conv_rows - 1) * sh + kh
+    in_step = conv_step * sh
+    return conv_rows, in_rows, in_step
+
+
+def default_block_h(oh: int, wo: int) -> int:
+    """Default row-band height: enough rows that each band's matmul has
+    a healthy M dimension (targets >= ~1024 conv pixels per band, the
+    MXU sweet spot) without approaching the whole-plane working set."""
+    target_rows = max(1, -(-1024 // max(wo, 1)))
+    return min(oh, target_rows, 32)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("strides", "shift", "relu", "pool", "block_cout", "interpret"),
+    static_argnames=("strides", "shift", "relu", "pool", "block_cout",
+                     "block_h", "interpret"),
 )
 def qconv2d(
     x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
@@ -103,6 +153,7 @@ def qconv2d(
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     block_cout: int = 128,
+    block_h: Optional[int] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     n, hp, wp, cin = x.shape
@@ -125,36 +176,66 @@ def qconv2d(
     else:
         oh, ow = ho, wo
 
+    bh = min(block_h or default_block_h(oh, wo), oh)
+    conv_rows, band_in_rows, in_step = band_geometry(bh, kh, sh, pool)
+    n_bands = -(-oh // bh)
+    ohp = n_bands * bh
+    # Rows past the last valid output row read zero-padding (zero ==
+    # symmetric quantization zero-point); their outputs are sliced off.
+    rows_needed = (n_bands - 1) * in_step + band_in_rows
+    if rows_needed > hp:
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
+
     out = pl.pallas_call(
         functools.partial(
-            _qconv_kernel,
+            _qconv_band_kernel,
             strides=strides,
-            out_hw=(ho, wo),
+            conv_hw=(conv_rows, wo),
             shift=shift,
             relu=relu,
             pool=pool,
         ),
-        grid=(n, coutp // bco),
+        grid=(n, n_bands, coutp // bco),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, cin), lambda ni, co: (ni, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, cin, bco), lambda ni, co: (0, 0, 0, co)),
-            pl.BlockSpec((1, bco), lambda ni, co: (0, co)),
+            # Overlapping halo bands: element-offset (unblocked)
+            # indexing; the map ignores `co`, so the band stays resident
+            # across the Cout tiles (no per-tile input re-read).
+            pl.BlockSpec((1, band_in_rows, wp, cin),
+                         lambda ni, hi, co: (ni, hi * in_step, 0, 0),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((kh, kw, cin, bco), lambda ni, hi, co: (0, 0, 0, co)),
+            pl.BlockSpec((1, bco), lambda ni, hi, co: (0, co)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, bco), lambda ni, co: (ni, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, coutp), jnp.int8),
+        out_specs=pl.BlockSpec((1, bh, ow, bco),
+                               lambda ni, hi, co: (ni, hi, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ohp, ow, coutp), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((conv_rows * wo, bco), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wpad, bpad)
-    return out[..., :cout]
+    return out[:, :oh, :, :cout]
 
 
 def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
-               ho: int, wo: int) -> int:
-    """Working-set estimate used by the DSE resource model: input plane +
-    weight tile + int32 accumulator + output tile."""
-    return (hp * wp * cin            # x int8
-            + kh * kw * cin * bco    # w int8
-            + 4 * ho * wo * bco      # acc int32
-            + ho * wo * bco)         # y int8
+               ho: int, wo: int, *,
+               sh: int = 1,
+               sw: Optional[int] = None,
+               block_h: Optional[int] = None,
+               pool: Optional[Tuple[int, int]] = None) -> int:
+    """Per-grid-step working-set estimate used by the DSE resource
+    model: one halo row band + weight tile + int32 accumulator scratch +
+    output band.  ``ho``/``wo`` are *final* output rows/cols (post-pool
+    when ``pool`` is fused); ``block_h=None`` means untiled (the whole
+    plane in one band — the old kernel's working set)."""
+    bh = min(block_h or ho, ho)
+    conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
+    band_in_rows = min(band_in_rows, hp)
+    conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
+    return (band_in_rows * wp * cin          # x band int8
+            + kh * kw * cin * bco            # w tile int8
+            + 4 * conv_rows * conv_wo * bco  # acc scratch int32
+            + bh * wo * bco)                 # y band int8
 
 
 def _rup(x: int, mult: int) -> int:

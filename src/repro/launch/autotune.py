@@ -11,13 +11,22 @@ Runs BF-DSE / RL-DSE (Algorithm-1 reward shaping, unchanged) over the
         --arch qwen2-1.5b --shape train_4k --algo rl \
         --axes remat=none,dots,full --axes n_micro=1,8 \
         --out results/autotune.json
+
+or over the CNN (N_i, N_l, block_h) space of a parsed model, with the
+calibrated board estimator + row-band working-set model as the
+compiler (the third axis is the conv kernel's row-band height):
+
+    PYTHONPATH=src python -m repro.launch.autotune \
+        --cnn alexnet --board ARRIA10 --algo rl \
+        --block-h 4,8,16,32 --out results/autotune_cnn.json
 """
 import argparse
 import json
 from typing import List, Tuple
 
 from repro.core import dse
-from repro.core.spaces import DEFAULT_POD_AXES, ShardingSpace
+from repro.core.spaces import (DEFAULT_BLOCK_H_OPTIONS, DEFAULT_POD_AXES,
+                               CNNDesignSpace, ShardingSpace)
 
 
 def parse_axes(specs: List[str]) -> List[Tuple[str, list]]:
@@ -41,7 +50,17 @@ def parse_axes(specs: List[str]) -> List[Tuple[str, list]]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="pod mode: LM architecture for the ShardingSpace")
+    ap.add_argument("--cnn", default=None,
+                    choices=["tiny", "alexnet", "vgg16"],
+                    help="CNN mode: explore (N_i, N_l, block_h) for this "
+                         "model instead of the pod ShardingSpace")
+    ap.add_argument("--board", default="ARRIA10",
+                    help="CNN mode: FPGA profile to score against")
+    ap.add_argument("--block-h", default=None,
+                    help="CNN mode: comma-separated row-band heights "
+                         f"(default {DEFAULT_BLOCK_H_OPTIONS})")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--algo", default="rl", choices=["rl", "bf"])
     ap.add_argument("--axes", action="append", default=[])
@@ -54,21 +73,40 @@ def main() -> int:
                          "the conservative unfused CPU-backend bound)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if (args.arch is None) == (args.cnn is None):
+        ap.error("exactly one of --arch (pod mode) / --cnn (CNN mode) "
+                 "is required")
 
-    space = ShardingSpace(args.arch, args.shape, axes=parse_axes(args.axes),
-                          eval_depth=args.eval_depth)
+    if args.cnn is not None:
+        from repro.core.parser import parse
+        from repro.core.resources import FPGA_BOARDS
+        from repro.models import cnn as cnn_models
+        graph = {"tiny": cnn_models.tiny_cnn, "alexnet": cnn_models.alexnet,
+                 "vgg16": cnn_models.vgg16}[args.cnn]()
+        try:
+            bh = ([int(v) for v in args.block_h.split(",")] if args.block_h
+                  else list(DEFAULT_BLOCK_H_OPTIONS))
+        except ValueError:
+            ap.error(f"--block-h must be comma-separated ints, "
+                     f"got {args.block_h!r}")
+        space = CNNDesignSpace(parse(graph), FPGA_BOARDS[args.board],
+                               block_h_options=bh)
+    else:
+        space = ShardingSpace(args.arch, args.shape,
+                              axes=parse_axes(args.axes),
+                              eval_depth=args.eval_depth)
     thresholds = dict(dse.DEFAULT_THRESHOLDS)
     thresholds["lut"] = args.lut_threshold
     thresholds["mem"] = max(thresholds["mem"], args.lut_threshold)
     print(f"option space: {len(space.options())} options "
-          f"x one XLA compile each")
+          f"x one compiler call each")
     if args.algo == "bf":
         res = dse.brute_force(space, thresholds=thresholds)
     else:
         res = dse.rl_dse(space, thresholds=thresholds,
                          episodes=args.episodes,
                          steps_per_episode=args.steps_per_episode)
-    names = [n for n, _ in space._axes]
+    names = space.axis_names()
     print(f"best option: {dict(zip(names, res.best)) if res.best else None}")
     print(f"F_avg={res.f_max:.1f}  compiles={res.evaluations}  "
           f"wall={res.wall_time_s:.0f}s")
@@ -80,7 +118,8 @@ def main() -> int:
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         payload = {
-            "arch": args.arch, "shape": args.shape, "algo": args.algo,
+            "arch": args.arch or args.cnn, "shape": args.shape,
+            "board": args.board if args.cnn else None, "algo": args.algo,
             "best": dict(zip(names, res.best)) if res.best else None,
             "f_max": res.f_max, "evaluations": res.evaluations,
             "history": [
