@@ -1,0 +1,99 @@
+"""Residual-network executor benchmark (interpret mode on CPU).
+
+Times the whole-network fused DAG executor (one jitted closure over the
+tensor-environment interpreter) against a stagewise baseline that
+re-dispatches the Python stage loop per call — the same comparison
+``pipeline_bench`` makes for linear nets, here over a skip-connection
+topology where the environment must keep residual operands live across
+stages.  Writes before/after JSON to ``results/resnet_bench.json`` next
+to ``pipeline_bench.json``.  Interpret-mode numbers are functional-path
+timings, NOT TPU performance — the point is the relative cost of the
+executor dataflow, which exists on every backend.
+"""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import parser as P
+from repro.core import pipeline as pipe
+from repro.core.synthesis import CNN2Gate
+from repro.kernels import ops
+from repro.models import cnn
+from .common import emit, timeit
+
+RNG = np.random.default_rng(0)
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "resnet_bench.json")
+
+
+def _stagewise(qm: pipe.QuantizedModel, x_float: jnp.ndarray):
+    """Baseline executor: the same DAG interpretation, but dispatched
+    stage-by-stage from Python on every call (no whole-program jit)."""
+    h = jnp.clip(jnp.round(x_float * 2.0 ** qm.input_m),
+                 -128, 127).astype(jnp.int8)
+    h = jnp.transpose(h, (0, 2, 3, 1))
+    env = {qm.parsed.input_name: h}
+    for ql in qm.layers:
+        li = ql.info
+        if li.kind == P.CONV:
+            pool = None
+            if li.pool is not None:
+                pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+            h = ops.qconv2d_nhwc(env[li.inputs[0]], ql.w_q, ql.b_q,
+                                 strides=li.strides, pads=li.pads,
+                                 shift=ql.spec.requant_shift, relu=li.relu,
+                                 pool=pool, groups=li.group, interpret=True)
+        elif li.kind == P.POOL:
+            fn = (ops.avgpool2d_nhwc if li.pool_type == "avg"
+                  else ops.maxpool2d_nhwc)
+            h = fn(env[li.inputs[0]], li.kernel_shape[0], li.strides[0],
+                   li.pads)
+        elif li.kind == P.FC:
+            h = env[li.inputs[0]]
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            h = ops.qgemm(h, ql.w_q, ql.b_q, shift=ql.spec.requant_shift,
+                          relu=li.relu, interpret=True)
+        elif li.kind == P.ADD:
+            h = ops.qadd_nhwc([env[t] for t in li.inputs],
+                              ql.operand_shifts,
+                              shift=ql.spec.requant_shift, relu=li.relu)
+        else:
+            h = ops.qconcat_nhwc([env[t] for t in li.inputs],
+                                 ql.operand_shifts, relu=li.relu)
+        env[li.output] = h
+    out = env[qm.parsed.output_name]
+    return out.astype(jnp.float32) * (2.0 ** -qm.output_m)
+
+
+def run() -> None:
+    results = {}
+    for tag, build, in_hw, batch in (
+            ("resnet_tiny", cnn.resnet_tiny, 32, 2),
+            ("mobilenet_tiny", cnn.mobilenet_tiny, 32, 2)):
+        gate = CNN2Gate.from_graph(build(batch=batch, in_hw=in_hw))
+        x = (RNG.standard_normal((batch, 3, in_hw, in_hw)) * 0.5
+             ).astype(np.float32)
+        gate.calibrate_quantization(x)
+        xj = jnp.asarray(x)
+        qm = gate.quantized
+
+        fused = gate.build("emulation")
+        us_fused = timeit(lambda: fused(xj), warmup=2, iters=9)
+        emit(f"resnet/{tag}_fused", us_fused,
+             "DAG interpreter under one jit")
+
+        us_stage = timeit(lambda: _stagewise(qm, xj), warmup=2, iters=9)
+        emit(f"resnet/{tag}_stagewise", us_stage,
+             "per-stage Python dispatch")
+        results[tag] = {
+            "batch": batch, "in_hw": in_hw,
+            "fused_us": us_fused, "stagewise_us": us_stage,
+            "speedup": us_stage / max(us_fused, 1e-9),
+        }
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(results, f, indent=1)

@@ -8,8 +8,8 @@ import sys
 import traceback
 
 from . import (fig6_breakdown, kernels_bench, perf_iterations,
-               pipeline_bench, roofline_table, table1_latency, table2_dse,
-               table3_alexnet, table4_vgg)
+               pipeline_bench, resnet_bench, roofline_table, table1_latency,
+               table2_dse, table3_alexnet, table4_vgg)
 
 SUITES = {
     "table1": table1_latency,
@@ -19,6 +19,7 @@ SUITES = {
     "fig6": fig6_breakdown,
     "kernels": kernels_bench,
     "pipeline": pipeline_bench,
+    "resnet": resnet_bench,
     "roofline": roofline_table,
     "perf": perf_iterations,
 }

@@ -25,6 +25,7 @@ SUPPORTED_OPS = (
     "Flatten",
     "Reshape",
     "Add",
+    "Concat",
     "GlobalAveragePool",
     "Dropout",  # inference no-op; parsed and elided
     "Identity",
@@ -132,6 +133,16 @@ class Graph:
         self.nodes = self._toposort()
         self.tensor_shapes: Dict[str, Tuple[int, ...]] = {}
         self._infer_shapes()
+        # Producer/consumer adjacency, built once: the parser queries
+        # these inside per-node loops, so the O(nodes) scans the naive
+        # producer_of/consumers_of would do turn quadratic on deep nets.
+        self._producer: Dict[str, Node] = {}
+        self._consumers: Dict[str, List[Node]] = {}
+        for n in self.nodes:
+            for o in n.outputs:
+                self._producer[o] = n
+            for i in n.inputs:
+                self._consumers.setdefault(i, []).append(n)
 
     # -- structure ----------------------------------------------------
     def _validate(self) -> None:
@@ -240,6 +251,18 @@ class Graph:
             raise GraphError(f"Add {n.name}: shape mismatch {a} vs {b}")
         return [a]
 
+    def _shape_concat(self, n: Node, ins):
+        axis = int(n.attr("axis", 1))
+        base = list(ins[0])
+        axis = axis % len(base)
+        for s in ins[1:]:
+            if len(s) != len(base) or any(
+                    a != b for d, (a, b) in enumerate(zip(s, base))
+                    if d != axis):
+                raise GraphError(f"Concat {n.name}: incompatible {ins}")
+        base[axis] = sum(s[axis] for s in ins)
+        return [tuple(base)]
+
     def _shape_flatten(self, n: Node, ins):
         (x,) = ins[:1]
         axis = int(n.attr("axis", 1))
@@ -279,13 +302,10 @@ class Graph:
 
     # -- convenience ----------------------------------------------------
     def producer_of(self, tensor: str) -> Optional[Node]:
-        for n in self.nodes:
-            if tensor in n.outputs:
-                return n
-        return None
+        return self._producer.get(tensor)
 
     def consumers_of(self, tensor: str) -> List[Node]:
-        return [n for n in self.nodes if tensor in n.inputs]
+        return list(self._consumers.get(tensor, ()))
 
     def shape(self, tensor: str) -> Tuple[int, ...]:
         return self.tensor_shapes[tensor]

@@ -1,14 +1,25 @@
-"""Front-end parser: ONNX-lite graph -> linked pipeline of LayerInfo.
+"""Front-end parser: ONNX-lite graph -> DAG stage program of LayerInfo.
 
 This is §4.1's parser: it traverses graph nodes in topological order,
 extracts per-layer synthesis information (kernel shape, strides, pads,
 dilations, weights, biases), detects the Relu/Softmax activations that
 follow compute nodes, and fuses Conv→Relu→MaxPool chains into single
 pipeline stages — the paper's "combination of memory read/write,
-convolution and pooling kernels" (Fig. 6 caption).  The result is a
-linked structure preserving order, which the synthesis tool consumes to
-configure hardware pipelines, plus the feasible (N_i, N_l) option sets
-derived from the divisibility constraints of §4.2.
+convolution and pooling kernels" (Fig. 6 caption).
+
+The result is a **topologically-scheduled stage program** over named
+tensors (the paper's "extensible acyclic graph"): each stage reads one
+or more named input tensors and produces one output tensor, tensors may
+have multiple consumers (fan-out), ``Add`` is a first-class
+residual-merge stage and ``Concat`` a channel-merge stage — so
+ResNet-class skip connections and Inception-style merges schedule
+exactly like the linear Conv→Pool→FC chains of the paper's Fig. 6.
+Pure data-movement ops (Flatten/Reshape/Dropout/Identity) that are not
+fused into a stage are resolved through an alias map, so stage inputs
+always name tensors some scheduled stage (or the graph input) produces.
+The linked prev/next structure of the paper is preserved over the
+schedule order, and the feasible (N_i, N_l) option sets extend the §4.2
+divisibility constraints to branch and depthwise layers.
 """
 from __future__ import annotations
 
@@ -24,16 +35,25 @@ from .graph import Graph, Node, _norm2, _norm4
 CONV = "conv"
 POOL = "pool"
 FC = "fc"  # Gemm — executed on the conv kernel with pool as pass-through
+ADD = "add"        # residual merge: elementwise int8 add + requantize
+CONCAT = "concat"  # channel merge: int8 concat at a common scale
+
+#: Pure data-movement ops: elided from the stage program (the memory
+#: read/write kernels absorb them); unfused occurrences become aliases.
+ELIDED_OPS = ("Flatten", "Reshape", "Dropout", "Identity")
 
 
 @dataclasses.dataclass
 class LayerInfo:
-    """One pipelined stage: conv/fc (+fused relu) (+fused pool)."""
+    """One pipelined stage: conv/fc (+fused relu) (+fused pool), or a
+    residual/channel merge (add/concat) over two or more named tensors."""
 
     kind: str
     name: str
-    # tensor names
-    input: str
+    # named tensors: every entry of ``inputs`` is produced by an earlier
+    # stage in the schedule (or is the graph input); ``output`` is the
+    # stage's single product (post-fusion name)
+    inputs: List[str]
     output: str
     weight: Optional[str] = None
     bias: Optional[str] = None
@@ -46,6 +66,7 @@ class LayerInfo:
     pads: Tuple[int, int, int, int] = (0, 0, 0, 0)
     dilations: Tuple[int, int] = (1, 1)
     group: int = 1
+    axis: int = 1                       # concat axis (NCHW convention)
     # fused ops
     relu: bool = False
     softmax: bool = False
@@ -56,6 +77,16 @@ class LayerInfo:
     next: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
 
     # -- derived quantities used by synthesis & DSE ---------------------
+    @property
+    def input(self) -> str:
+        """First (primary) input tensor — the only one for conv/pool/fc."""
+        return self.inputs[0]
+
+    @property
+    def is_depthwise(self) -> bool:
+        return self.kind == CONV and self.group > 1 and \
+            self.group == self.c_in and self.c_out == self.c_in
+
     @property
     def c_in(self) -> int:
         if self.kind == FC:
@@ -76,6 +107,8 @@ class LayerInfo:
     @property
     def macs(self) -> int:
         """Multiply-accumulate count of the compute stage."""
+        if self.kind in (ADD, CONCAT):
+            return 0  # merge stages: pure adders / data movement, no MACs
         if self.kind == FC:
             m, k = self.in_shape[-2], self.in_shape[-1]
             n = self.out_shape[-1]
@@ -100,7 +133,10 @@ class LayerInfo:
 
 @dataclasses.dataclass
 class ParsedModel:
-    """Linked pipeline + option sets; what the synthesizer consumes."""
+    """Topologically-scheduled stage program + option sets; what the
+    synthesizer consumes.  ``layers`` is the schedule: every stage's
+    input tensors are produced by an earlier stage or are the graph
+    input, so an interpreter can execute the list front to back."""
 
     name: str
     layers: List[LayerInfo]
@@ -108,6 +144,17 @@ class ParsedModel:
     input_name: str
     input_shape: Tuple[int, ...]
     output_name: str
+
+    def __post_init__(self) -> None:
+        self._producer_stage: Dict[str, LayerInfo] = {
+            li.output: li for li in self.layers}
+
+    def stage_producing(self, tensor: str) -> Optional[LayerInfo]:
+        """The scheduled stage whose (post-fusion) output is ``tensor``."""
+        return self._producer_stage.get(tensor)
+
+    def consumer_stages(self, tensor: str) -> List[LayerInfo]:
+        return [li for li in self.layers if tensor in li.inputs]
 
     @property
     def head(self) -> LayerInfo:
@@ -130,7 +177,11 @@ class ParsedModel:
         """N_i must divide the input-channel (vector) width of every
         compute layer to avoid padding.  The first conv layer's 3-channel
         RGB input is zero-padded to the vector width by the memory-read
-        kernel (as PipeCNN does), so it is exempt."""
+        kernel (as PipeCNN does), so it is exempt.  Depthwise/grouped
+        convs stream channel-major vectors (each lane owns a channel, the
+        per-group contraction is only ``kh*kw*c_in/g`` deep), so the
+        constraint stays on the channel count.  Merge stages (add/concat)
+        carry no weights and impose no N_i constraint."""
         cands = []
         widths = [l.c_in for l in self.layers[1:] if l.kind in (CONV, FC)]
         for ni in range(1, cap + 1):
@@ -144,7 +195,9 @@ class ParsedModel:
         odd-sized output (e.g. 1000 classes) is zero-padded up to a lane
         multiple by the memory-write kernel, as PipeCNN does — without
         this the paper's own (16, 32) Arria-10 choice would be
-        infeasible for AlexNet/VGG."""
+        infeasible for AlexNet/VGG.  Add/concat merge stages run on the
+        memory/adder path, not the compute lanes, so only conv/fc output
+        widths constrain N_l."""
         cands = []
         feats = [l.c_out for l in self.layers[:-1] if l.kind in (CONV, FC)]
         for nl in range(1, cap + 1):
@@ -162,19 +215,31 @@ def _pow2(x: int) -> bool:
 
 
 def parse(graph: Graph) -> ParsedModel:
-    """Traverse the graph and emit the linked pipeline structure."""
+    """Traverse the graph (already topologically ordered) and emit the
+    scheduled DAG stage program.
+
+    Fusion (relu/softmax/max-pool/data-movement behind a stage) only
+    happens across single-consumer tensors, so any tensor fused away has
+    no other reader — every multi-consumer tensor (residual fan-out)
+    survives as a named stage output.  Unfused data-movement nodes
+    become aliases; stage inputs are canonicalised through them so the
+    executor's tensor environment only ever holds stage outputs."""
     layers: List[LayerInfo] = []
     consumed: set = set()
+    alias: Dict[str, str] = {}
 
-    node_list = graph.nodes
-    i = 0
-    while i < len(node_list):
-        node = node_list[i]
-        i += 1
+    def canon(t: str) -> str:
+        while t in alias:
+            t = alias[t]
+        return t
+
+    for node in graph.nodes:
         if node.name in consumed:
             continue
-        if node.op_type in ("Flatten", "Reshape", "Dropout", "Identity"):
-            continue  # pure data-movement; handled by memory-read schedule
+        if node.op_type in ELIDED_OPS:
+            # pure data-movement; the memory-read schedule absorbs it
+            alias[node.outputs[0]] = node.inputs[0]
+            continue
         if node.op_type == "Conv":
             li = _conv_layer(graph, node)
         elif node.op_type in ("Gemm", "MatMul"):
@@ -182,30 +247,44 @@ def parse(graph: Graph) -> ParsedModel:
         elif node.op_type in ("MaxPool", "AveragePool", "GlobalAveragePool"):
             # standalone pool (not fused behind a conv)
             li = _pool_layer(graph, node)
-        elif node.op_type in ("Relu", "Softmax", "Add"):
+        elif node.op_type == "Add":
+            li = _merge_layer(graph, node, ADD)
+        elif node.op_type == "Concat":
+            li = _merge_layer(graph, node, CONCAT)
+        elif node.op_type in ("Relu", "Softmax"):
             raise_if_unfused(graph, node, layers)
             continue
         else:
             continue
-        # fuse activation + pool chains greedily
+        # fuse activation + pool chains greedily (single-consumer only)
         _fuse_chain(graph, li, consumed)
+        li.inputs = [canon(t) for t in li.inputs]
         layers.append(li)
 
     if not layers:
         raise ValueError(f"graph {graph.name!r} contains no compute layers")
 
-    # link the list (the paper's order-preserving structure)
+    # link the list in schedule order (the paper's order-preserving
+    # structure; with branches this is the topological schedule)
     for a, b in zip(layers, layers[1:]):
         a.next, b.prev = b, a
 
+    produced = {li.output for li in layers}
     inp = graph.inputs[0]
+    for li in layers:
+        for t in li.inputs:
+            if t not in produced and t != inp.name:
+                raise ValueError(
+                    f"stage {li.name!r} reads tensor {t!r} that no "
+                    "scheduled stage produces")
+
     return ParsedModel(
         name=graph.name,
         layers=layers,
         graph=graph,
         input_name=inp.name,
         input_shape=tuple(inp.shape),
-        output_name=layers[-1].output,
+        output_name=canon(graph.outputs[0]),
     )
 
 
@@ -232,7 +311,7 @@ def _conv_layer(graph: Graph, node: Node) -> LayerInfo:
     return LayerInfo(
         kind=CONV,
         name=node.name,
-        input=node.inputs[0],
+        inputs=[node.inputs[0]],
         output=node.outputs[0],
         weight=w_name,
         bias=b_name,
@@ -252,7 +331,7 @@ def _fc_layer(graph: Graph, node: Node) -> LayerInfo:
     return LayerInfo(
         kind=FC,
         name=node.name,
-        input=node.inputs[0],
+        inputs=[node.inputs[0]],
         output=node.outputs[0],
         weight=w_name,
         bias=b_name,
@@ -272,7 +351,7 @@ def _pool_layer(graph: Graph, node: Node) -> LayerInfo:
     return LayerInfo(
         kind=POOL,
         name=node.name,
-        input=node.inputs[0],
+        inputs=[node.inputs[0]],
         output=node.outputs[0],
         in_shape=graph.shape(node.inputs[0]),
         out_shape=graph.shape(node.outputs[0]),
@@ -280,6 +359,21 @@ def _pool_layer(graph: Graph, node: Node) -> LayerInfo:
         strides=st,
         pads=_norm4(node.attr("pads")),
         pool_type="max" if node.op_type == "MaxPool" else "avg",
+    )
+
+
+def _merge_layer(graph: Graph, node: Node, kind: str) -> LayerInfo:
+    """Residual (Add) or channel (Concat) merge as a first-class stage:
+    all operands are named tensors; the executor aligns their fixed-point
+    positions before merging (see pipeline/quantize)."""
+    return LayerInfo(
+        kind=kind,
+        name=node.name,
+        inputs=list(node.inputs),
+        output=node.outputs[0],
+        in_shape=graph.shape(node.inputs[0]),
+        out_shape=graph.shape(node.outputs[0]),
+        axis=int(node.attr("axis", 1)) if kind == CONCAT else 1,
     )
 
 
@@ -309,9 +403,12 @@ def _fuse_chain(graph: Graph, li: LayerInfo, consumed: set) -> None:
             consumed.add(n.name)
             cur_out = n.outputs[0]
             li.output = cur_out
-        elif n.op_type == "MaxPool" and li.kind == CONV and li.pool is None:
+        elif (n.op_type == "MaxPool" and li.kind == CONV
+              and li.pool is None and not any(_norm4(n.attr("pads")))):
             # only max-pool fuses into the conv kernel (its pooling
-            # stage computes max); average pools run standalone
+            # stage computes max); average pools and *padded* max-pools
+            # run standalone — the fused band kernel has no pool-pad
+            # path, and maxpool2d_nhwc handles pads exactly
             pool = _pool_layer(graph, n)
             li.pool = pool
             consumed.add(n.name)
@@ -342,6 +439,23 @@ def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, An
                     kind=li.kind,
                     read_vectors=rows * vec_per_row,
                     weight_vectors=li.c_out * vec_per_row,
+                    lanes=min(n_l, li.c_out),
+                    write_elems=int(np.prod(li.out_shape)),
+                )
+            )
+        elif li.kind in (ADD, CONCAT):
+            # merge stages stream every operand once and write the
+            # merged tensor — pure memory traffic, no weight vectors
+            if li.kind == ADD:
+                read_elems = len(li.inputs) * int(np.prod(li.in_shape))
+            else:
+                read_elems = int(np.prod(li.out_shape))
+            sched.append(
+                dict(
+                    layer=li.name,
+                    kind=li.kind,
+                    read_vectors=-(-read_elems // n_i),
+                    weight_vectors=0,
                     lanes=min(n_l, li.c_out),
                     write_elems=int(np.prod(li.out_shape)),
                 )

@@ -5,16 +5,26 @@ weights/biases once, and runs inference by streaming each pipeline stage
 through the fused Pallas kernels (conv+ReLU+pool on the conv kernel, FC
 on the same matrix unit with pooling configured pass-through — §5).
 
-The executor is **whole-network fused** (DESIGN.md §3): activations
-stay NHWC int8 from ingress to egress — one NCHW->NHWC conversion when
-the float input is quantized, one back only if the network ends in a
+The executor is an **interpreter over the DAG stage program**
+(DESIGN.md §6): the parser's topologically-scheduled stage list is
+executed against a tensor environment of named int8 NHWC activations,
+with liveness-based release (a tensor is dropped from the environment
+after its last consumer runs, so a residual skip holds exactly as long
+as its merge needs it).  Residual ``Add`` stages align their operands'
+fixed-point positions with per-operand round-half-up shifts before the
+int32 add (see :func:`thread_scales`); grouped/depthwise convs dispatch
+to the depthwise band kernel or the exact reference path.
+
+It remains **whole-network fused** (DESIGN.md §3): activations stay
+NHWC int8 from ingress to egress — one NCHW->NHWC conversion when the
+float input is quantized, one back only if the network ends in a
 spatial stage — and every layer's weights are pre-staged into the
 kernel-native layout once at :func:`build_quantized` time (conv OIHW ->
 HWIO; FC rows permuted so flattening an NHWC activation hits the same
 features the NCHW-trained weights expect).  :func:`make_executor`
-closes the whole layer program over one ``jax.jit``, so steady-state
+closes the whole stage program over one ``jax.jit``, so steady-state
 calls re-enter a single compiled executable instead of re-dispatching
-the Python layer loop — the TPU analogue of the paper's host program
+the Python stage loop — the TPU analogue of the paper's host program
 enqueueing one fused command queue.
 """
 from __future__ import annotations
@@ -34,12 +44,14 @@ from .quantize import QuantSpec, quantize_weights
 @dataclasses.dataclass
 class QuantizedLayer:
     """One stage with weights staged in the kernel-native layout:
-    conv -> HWIO int8, FC -> (K, N) int8 in NHWC-flatten row order."""
+    conv -> HWIO int8, FC -> (K, N) int8 in NHWC-flatten row order.
+    Merge stages carry per-operand alignment shifts instead of weights."""
 
     info: P.LayerInfo
-    spec: QuantSpec
+    spec: Optional[QuantSpec]
     w_q: Optional[jnp.ndarray]
     b_q: Optional[jnp.ndarray]
+    operand_shifts: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -59,12 +71,63 @@ class QuantizedModel:
         return self.parsed.hardware_options
 
 
+def thread_scales(model: P.ParsedModel,
+                  specs: Dict[str, QuantSpec]) -> Dict[str, int]:
+    """Per-tensor fixed-point exponents implied by the per-layer specs —
+    a graph pass over the DAG (the linear scan of the old executor only
+    worked because every tensor had exactly one consumer).
+
+    Rules: a weighted stage pins its input tensor at ``m_x`` and its
+    output at ``m_y``; pools pass the scale through unchanged (both
+    directions, so a pool feeding the first conv resolves too); merge
+    stages output at their spec's ``m_y``, or at the minimum operand
+    position when no spec was given.  Iterated to fixpoint; raises if
+    the graph input or output never resolves (under-specified specs).
+    """
+    tensor_m: Dict[str, int] = {}
+    for _ in range(len(model.layers) + 2):
+        changed = False
+
+        def _set(t: str, m: int) -> None:
+            nonlocal changed
+            if t not in tensor_m:
+                tensor_m[t] = m
+                changed = True
+
+        for li in model.layers:
+            spec = specs.get(li.name)
+            if li.kind in (P.CONV, P.FC):
+                if spec is None:
+                    raise KeyError(f"no QuantSpec for layer {li.name!r}")
+                _set(li.inputs[0], spec.m_x)
+                _set(li.output, spec.m_y)
+            elif li.kind == P.POOL:
+                if li.inputs[0] in tensor_m:
+                    _set(li.output, tensor_m[li.inputs[0]])
+                elif li.output in tensor_m:
+                    _set(li.inputs[0], tensor_m[li.output])
+            else:  # add / concat
+                if spec is not None:
+                    _set(li.output, spec.m_y)
+                elif all(t in tensor_m for t in li.inputs):
+                    _set(li.output, min(tensor_m[t] for t in li.inputs))
+        if not changed:
+            break
+    for t in (model.input_name, model.output_name):
+        if t not in tensor_m:
+            raise ValueError(f"could not resolve fixed-point position of "
+                             f"tensor {t!r} from the given specs")
+    return tensor_m
+
+
 def _stage_weights(li: P.LayerInfo, prev: Optional[P.LayerInfo],
                    w_q: np.ndarray) -> np.ndarray:
     """One-time layout staging (ingress-side, never per inference):
     conv OIHW -> HWIO; FC weight rows reordered from the exporter's
     NCHW-flatten order (c, h, w) to the executor's NHWC-flatten order
-    (h, w, c) when the FC consumes a flattened spatial tensor."""
+    (h, w, c) when the FC consumes a flattened spatial tensor.  ``prev``
+    is the stage *producing* the FC's input tensor (DAG producer, not
+    list predecessor)."""
     if li.kind == P.CONV:
         return np.transpose(w_q, (2, 3, 1, 0))
     if li.kind == P.FC and prev is not None and len(prev.out_shape) == 4:
@@ -77,42 +140,80 @@ def _stage_weights(li: P.LayerInfo, prev: Optional[P.LayerInfo],
     return w_q
 
 
+def _check_group(li: P.LayerInfo) -> None:
+    """Every grouped conv must be executable *as a grouped conv* —
+    an invalid group can never fall through to the dense kernel and
+    produce silently wrong numerics."""
+    g = li.group
+    if g < 1 or li.c_in % g or li.c_out % g:
+        raise NotImplementedError(
+            f"conv {li.name!r}: group={g} does not divide "
+            f"C_in={li.c_in}/C_out={li.c_out}; the executor cannot map "
+            "this onto the grouped kernel library")
+
+
 def build_quantized(model: P.ParsedModel,
                     specs: Dict[str, QuantSpec]) -> QuantizedModel:
     """Apply the user-given (N, m) pairs (the paper: CNN2Gate does not
     *perform* quantization, it *applies* provided values) and stage all
-    weights into the kernel-native layouts."""
+    weights into the kernel-native layouts.  Merge stages (add/concat)
+    get per-operand alignment shifts derived from :func:`thread_scales`;
+    a spec for them is optional (default: merge at the minimum operand
+    position, no output requant)."""
+    tensor_m = thread_scales(model, specs)
     layers: List[QuantizedLayer] = []
-    prev_info: Optional[P.LayerInfo] = None
     for li in model.layers:
         # pool stages carry no weights: int8 passes through at the
         # incoming fixed-point scale (no spec, no requant)
-        spec = specs.get(li.name) if li.kind == P.POOL else specs[li.name]
+        spec = specs.get(li.name) if li.kind in (P.POOL, P.ADD, P.CONCAT) \
+            else specs[li.name]
         w = model.graph.initializers[li.weight] if li.weight else None
         b = model.graph.initializers[li.bias] if li.bias else None
         w_q, b_q = (None, None)
+        operand_shifts: Tuple[int, ...] = ()
+        if li.kind == P.CONV:
+            _check_group(li)
+        if li.kind in (P.ADD, P.CONCAT):
+            m_ops = [tensor_m[t] for t in li.inputs]
+            if spec is None:
+                m_common = min(m_ops)
+                spec = QuantSpec(m_w=0, m_x=m_common, m_y=m_common)
+            operand_shifts = tuple(m - spec.m_x for m in m_ops)
+            if any(s < 0 for s in operand_shifts):
+                raise ValueError(
+                    f"merge {li.name!r}: operand position below the "
+                    f"common scale m={spec.m_x} (shifts {operand_shifts})"
+                    " — shift-only alignment cannot scale up")
         if w is not None:
             w_q, b_q = quantize_weights(w, b, spec)
+            prev_info = model.stage_producing(li.inputs[0])
             w_q = jnp.asarray(_stage_weights(li, prev_info, w_q))
             b_q = jnp.asarray(b_q) if b_q is not None else None
-        layers.append(QuantizedLayer(li, spec, w_q, b_q))
-        prev_info = li
+        layers.append(QuantizedLayer(li, spec, w_q, b_q, operand_shifts))
     return QuantizedModel(
         name=model.name,
         layers=layers,
-        input_m=specs[model.layers[0].name].m_x,
-        output_m=specs[model.layers[-1].name].m_y,
+        input_m=tensor_m[model.input_name],
+        output_m=tensor_m[model.output_name],
         parsed=model,
     )
+
+
+def _concat_axis(axis: int, ndim: int) -> int:
+    """Map an NCHW concat axis onto the executor's NHWC layout."""
+    if ndim == 4:
+        return {0: 0, 1: 3, 2: 1, 3: 2}[axis % 4]
+    return axis
 
 
 def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                   block_h: Optional[int] = None,
                   interpret: Optional[bool] = None
                   ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Build the whole-network fused executor: ONE jitted closure over
-    the staged layer list.  ``x_float`` is the NCHW float input; the
-    result is float logits (dequantized with the final layer's m_y).
+    """Build the whole-network fused executor: ONE jitted closure that
+    interprets the DAG stage program over a tensor environment.
+    ``x_float`` is the NCHW float input; the result is float logits
+    (dequantized with the output tensor's m).
 
     (N_i, N_l, block_h) select kernel tile shapes: N_l lanes ->
     output-channel tile (x8: eight 8-bit MACs per lane-vector element
@@ -120,32 +221,50 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     conv kernel's row-band height (the line-buffer depth of DESIGN.md
     §2).  Functionally the result is identical for every option —
     options trade resources for speed, exactly as in the paper.
+
+    Buffer release is liveness-based: the stage index of each tensor's
+    last consumer is precomputed, and the environment drops a tensor as
+    soon as the schedule passes it — the program's peak live set (what
+    the FPGA would hold in DDR-visible buffers) is what the DSE's branch
+    rules score, not one threaded activation.
     """
     block_cout = max(8 * n_l, 8)
-    last = qm.layers[-1].info
+    stages = qm.layers
+    out_name = qm.parsed.output_name
+    in_name = qm.parsed.input_name
+    out_stage = qm.parsed.stage_producing(out_name)
+
+    last_use: Dict[str, int] = {}
+    for idx, ql in enumerate(stages):
+        for t in ql.info.inputs:
+            last_use[t] = idx
+    last_use[out_name] = len(stages)  # the egress reads it
 
     def forward(x_float: jnp.ndarray) -> jnp.ndarray:
         scale = 2.0 ** qm.input_m
         h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
         if h.ndim == 4:
             h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
-        for ql in qm.layers:
+        env: Dict[str, jnp.ndarray] = {in_name: h}
+        for idx, ql in enumerate(stages):
             li = ql.info
             if li.kind == P.CONV:
                 pool = None
                 if li.pool is not None:
                     pool = (li.pool.kernel_shape[0], li.pool.strides[0])
                 h = ops.qconv2d_nhwc(
-                    h, ql.w_q, ql.b_q,
+                    env[li.inputs[0]], ql.w_q, ql.b_q,
                     strides=li.strides, pads=li.pads,
                     shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
-                    block_cout=block_cout, block_h=block_h,
+                    groups=li.group, block_cout=block_cout, block_h=block_h,
                     interpret=interpret)
             elif li.kind == P.POOL:
                 pool_fn = (ops.avgpool2d_nhwc if li.pool_type == "avg"
                            else ops.maxpool2d_nhwc)
-                h = pool_fn(h, li.kernel_shape[0], li.strides[0], li.pads)
+                h = pool_fn(env[li.inputs[0]], li.kernel_shape[0],
+                            li.strides[0], li.pads)
             elif li.kind == P.FC:
+                h = env[li.inputs[0]]
                 if h.ndim > 2:
                     # NHWC flatten: rows were permuted at staging time
                     h = h.reshape(h.shape[0], -1)
@@ -155,12 +274,27 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                               block_n=min(128, max(8 * n_l, 8)),
                               block_k=128,
                               interpret=interpret)
-            else:  # pragma: no cover - parser only emits the three kinds
+            elif li.kind == P.ADD:
+                h = ops.qadd_nhwc([env[t] for t in li.inputs],
+                                  ql.operand_shifts,
+                                  shift=ql.spec.requant_shift,
+                                  relu=li.relu)
+            elif li.kind == P.CONCAT:
+                xs = [env[t] for t in li.inputs]
+                h = ops.qconcat_nhwc(xs, ql.operand_shifts,
+                                     axis=_concat_axis(li.axis, xs[0].ndim),
+                                     relu=li.relu)
+            else:  # pragma: no cover - parser only emits the five kinds
                 raise ValueError(li.kind)
+            env[li.output] = h
+            for t in li.inputs:     # liveness-based buffer release
+                if last_use.get(t) == idx:
+                    env.pop(t, None)  # pop: an operand may repeat (x + x)
+        h = env[out_name]
         if h.ndim == 4:
             h = jnp.transpose(h, (0, 3, 1, 2))      # single egress NHWC->NCHW
         logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
-        if last.softmax:
+        if out_stage is not None and out_stage.softmax:
             logits = jax.nn.softmax(logits, axis=-1)
         return logits
 
@@ -184,7 +318,14 @@ def run_int8(qm: QuantizedModel, x_float: jnp.ndarray,
 
 def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
     """(input, weight, output) int8 bytes of a stage — feeds the FPGA
-    latency model and the memory-schedule report."""
+    latency model and the memory-schedule report.  Merge stages read
+    every operand."""
+    if li.kind in (P.ADD, P.CONCAT):
+        if li.kind == P.ADD:
+            in_b = len(li.inputs) * int(np.prod(li.in_shape))
+        else:
+            in_b = int(np.prod(li.out_shape))
+        return in_b, 0, int(np.prod(li.out_shape))
     in_b = int(np.prod(li.in_shape))
     w_b = li.weight_count()
     out_b = int(np.prod(li.out_shape))

@@ -11,15 +11,17 @@ units.  This module implements:
   * ``quantize_weights`` — float weights/biases → int8 N with the given
     m (biases are int32 at scale 2^-(m_w+m_x) so they add directly into
     the int32 accumulator).
-  * ``calibrate`` — a convenience PTQ calibrator (max-abs, power-of-two)
-    standing in for the external tool the paper assumes the user ran.
+  * ``best_pow2_exponent`` — the max-abs power-of-two PTQ rule the
+    DAG-aware calibrator (synthesis.calibrate_quantization) applies per
+    named tensor, standing in for the external tool the paper assumes
+    the user ran.
   * ``requant_shift`` — the right-shift that maps int32 accumulators back
     to int8 outputs: shift = m_w + m_x - m_y.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -99,28 +101,6 @@ def best_pow2_exponent(x: np.ndarray, bits: int = 8) -> int:
     hi = 2 ** (bits - 1) - 1
     m = int(np.floor(np.log2(hi / amax)))
     return max(-(bits - 1), min(m, 24))
-
-
-def calibrate(
-    weights: Dict[str, np.ndarray],
-    activations: Dict[str, np.ndarray],
-    layer_io: Iterable[Tuple[str, str, str, str]],
-) -> Dict[str, QuantSpec]:
-    """Produce per-layer QuantSpecs from sample activations.
-
-    ``layer_io`` yields (layer_name, weight_tensor, input_tensor,
-    output_tensor).  This plays the role of the user's external PTQ tool
-    (e.g. [3] in the paper): CNN2Gate itself only *applies* the result.
-    """
-    specs: Dict[str, QuantSpec] = {}
-    for name, w_name, in_name, out_name in layer_io:
-        m_w = best_pow2_exponent(weights[w_name])
-        m_x = best_pow2_exponent(activations[in_name])
-        m_y = best_pow2_exponent(activations[out_name])
-        # keep the requant shift non-negative (paper's shift-only path)
-        m_y = min(m_y, m_w + m_x)
-        specs[name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
-    return specs
 
 
 def quantization_error(x: np.ndarray, m: int, bits: int = 8) -> float:

@@ -117,19 +117,40 @@ VMEM_BUDGET_BYTES = 16 * 1024 ** 2
 
 def conv_band_working_set(layers, n_l: int,
                           block_h: Optional[int]) -> int:
-    """Peak per-grid-step VMEM bytes of the row-tiled conv kernel across
-    the model's conv layers (the quantity the DSE must keep under the
+    """Peak per-grid-step VMEM bytes of the row-tiled kernels across the
+    model's stage program (the quantity the DSE must keep under the
     on-chip budget — the paper's line-buffer/block-RAM sizing, §3.2.2).
 
-    ``layers`` is the parsed ``LayerInfo`` list; ``n_l`` maps to the
+    ``layers`` is the parsed ``LayerInfo`` schedule; ``n_l`` maps to the
     output-channel tile exactly as the executor maps it
     (``block_cout = 8 * N_l``); ``block_h=None`` scores the untiled
-    whole-plane kernel."""
+    whole-plane kernel.  Beyond dense convs the feasibility rule covers:
+
+      * depthwise convs — the channel-tiled band of ``dw_vmem_bytes``
+        (the input band shrinks with the channel tile, unlike the dense
+        contraction which must see every Cin);
+      * ragged grouped convs — the reference path's whole-plane set
+        (no banding: x plane + weights + int32 accumulator + output);
+      * residual/concat merges — every operand band plus the int32
+        alignment intermediate and the output band (the skip buffer the
+        paper would hold in block RAM while the main branch computes).
+    """
     from repro.kernels import qconv  # kernels never import core: no cycle
 
     block_cout = max(8 * n_l, 8)
     peak = 0
     for li in layers:
+        if li.kind in ("add", "concat"):
+            n_ops = len(li.inputs)
+            if len(li.out_shape) == 4:  # spatial merge: row-banded
+                _n, c, h, w = li.out_shape
+                bh = min(block_h or h, h)
+                band_elems = bh * w * c
+            else:  # vector merge (MLP-style skip): whole tensor
+                band_elems = int(math.prod(li.out_shape[1:]))
+            # operand bands int8 + int32 add intermediate + out band
+            peak = max(peak, band_elems * (n_ops + 4 + 1))
+            continue
         if li.kind != "conv":
             continue
         _n, cin, h, w = li.in_shape
@@ -141,10 +162,20 @@ def conv_band_working_set(layers, n_l: int,
         pool = None
         if li.pool is not None:
             pool = (li.pool.kernel_shape[0], li.pool.strides[0])
-        bco = min(block_cout, -(-cout // 128) * 128)
-        peak = max(peak, qconv.vmem_bytes(
-            hp, wp, cin, kh, kw, bco, oh, ow,
-            sh=sh, sw=sw, block_h=block_h, pool=pool))
+        if li.is_depthwise:
+            bc = min(block_cout, -(-cout // 128) * 128)
+            ws = qconv.dw_vmem_bytes(wp, cout, kh, kw, bc, oh, ow,
+                                     sh=sh, sw=sw, block_h=block_h,
+                                     pool=pool)
+        elif li.group > 1:  # ragged grouped conv: unbanded reference path
+            ws = (hp * wp * cin + li.weight_count()
+                  + 4 * oh * ow * cout + oh * ow * cout)
+        else:
+            bco = min(block_cout, -(-cout // 128) * 128)
+            ws = qconv.vmem_bytes(
+                hp, wp, cin, kh, kw, bco, oh, ow,
+                sh=sh, sw=sw, block_h=block_h, pool=pool)
+        peak = max(peak, ws)
     return peak
 
 

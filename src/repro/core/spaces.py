@@ -36,7 +36,11 @@ class CNNDesignSpace(DesignSpace):
     stand-in for the vendor compiler; in the 3-axis space it adds the
     row-band working set (``conv_band_working_set``) against the
     board's on-chip memory, so options whose band does not fit are
-    rejected exactly like any over-quota option in Algorithm 1.
+    rejected exactly like any over-quota option in Algorithm 1.  The
+    working-set rule covers the whole DAG stage program — dense,
+    depthwise and ragged grouped convs plus residual/concat merge
+    buffers (resources.py) — so branchy models prune the same way
+    linear ones do.
     """
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,

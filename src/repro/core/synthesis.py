@@ -34,7 +34,7 @@ from . import dse as dse_mod
 from . import parser as P
 from . import pipeline as pipe
 from .graph import Graph
-from .quantize import QuantSpec, calibrate
+from .quantize import QuantSpec, best_pow2_exponent
 from .resources import (FPGA_BOARDS, FPGAProfile, fpga_layer_time_s)
 from .spaces import CNNDesignSpace
 
@@ -91,29 +91,76 @@ class CNN2Gate:
         self.quantized = pipe.build_quantized(self.parsed, specs)
 
     def calibrate_quantization(self, sample_input: np.ndarray) -> Dict[str, QuantSpec]:
-        """Convenience PTQ (stand-in for the user's external tool)."""
-        import dataclasses as _dc
-        acts = collect_activations(self.parsed.graph, sample_input)
-        acts[self.parsed.input_name] = np.asarray(sample_input)
-        layer_io = [
-            (li.name, li.weight, li.input, li.output)
-            for li in self.parsed.layers if li.weight is not None
-        ]
-        weights = self.parsed.graph.initializers
-        specs = calibrate(weights, acts, layer_io)
-        # scale consistency through standalone pool stages: pools pass
-        # int8 through at the incoming fixed-point scale, so the next
-        # compute layer's m_x must equal the producer's m_y
-        cur_m = None
-        for li in self.parsed.layers:
-            if li.weight is None:            # pool stage
-                continue
-            spec = specs[li.name]
-            if cur_m is not None and spec.m_x != cur_m:
-                spec = _dc.replace(spec, m_x=cur_m,
-                                   m_y=min(spec.m_y, spec.m_w + cur_m))
-                specs[li.name] = spec
-            cur_m = spec.m_y
+        """Convenience PTQ (stand-in for the user's external tool) — a
+        graph pass over the DAG stage program, not a linear scan.
+
+        Three passes (DESIGN.md §6):
+
+        1. *stats* — max-abs power-of-two exponent for every named
+           tensor in the stage program (from the float activations);
+        2. *branch-aware alignment* — the operands of every int8
+           ``Add``/``Concat`` must agree on fixed-point position
+           (shift-only arithmetic cannot scale up), so merge operands
+           form a scale group pinned at the group minimum; iterated to
+           fixpoint because groups chain through stacked residuals;
+        3. *forward threading* — walk the schedule: each weighted
+           stage's ``m_x`` is its input tensor's position, ``m_y`` is
+           capped at ``m_w + m_x`` (non-negative requant shift); pools
+           pass scale through; merges emit a ``QuantSpec(0, m_common,
+           m_y)`` whose requant shift is the post-add renormalisation.
+
+        When a producer's ``m_y`` cap lands below its merge group's
+        position, the executor's per-operand alignment shifts absorb
+        the residual mismatch — alignment is an optimisation (it makes
+        those shifts zero), not a correctness requirement.
+        """
+        pm = self.parsed
+        acts = collect_activations(pm.graph, sample_input)
+        acts[pm.input_name] = np.asarray(sample_input)
+        weights = pm.graph.initializers
+
+        # pass 1: per-tensor desired positions from activation stats
+        desired: Dict[str, int] = {}
+        for li in pm.layers:
+            for t in list(li.inputs) + [li.output]:
+                if t not in desired:
+                    desired[t] = best_pow2_exponent(acts[t])
+        desired.setdefault(pm.input_name,
+                           best_pow2_exponent(acts[pm.input_name]))
+
+        # pass 2: merge-operand scale groups -> group minimum (fixpoint)
+        changed = True
+        while changed:
+            changed = False
+            for li in pm.layers:
+                if li.kind not in (P.ADD, P.CONCAT):
+                    continue
+                m = min(desired[t] for t in li.inputs)
+                for t in li.inputs:
+                    if desired[t] != m:
+                        desired[t] = m
+                        changed = True
+
+        # pass 3: forward threading over the schedule
+        tensor_m: Dict[str, int] = {pm.input_name: desired[pm.input_name]}
+        specs: Dict[str, QuantSpec] = {}
+        for li in pm.layers:
+            if li.kind in (P.CONV, P.FC):
+                m_w = best_pow2_exponent(weights[li.weight])
+                m_x = tensor_m[li.inputs[0]]
+                m_y = min(desired[li.output], m_w + m_x)
+                specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
+                tensor_m[li.output] = m_y
+            elif li.kind == P.POOL:
+                tensor_m[li.output] = tensor_m[li.inputs[0]]
+            else:  # add / concat
+                m_common = min(tensor_m[t] for t in li.inputs)
+                if li.kind == P.ADD:
+                    m_y = min(desired[li.output], m_common)
+                else:  # concat never rescales its operands' values
+                    m_y = m_common
+                specs[li.name] = QuantSpec(m_w=0, m_x=m_common, m_y=m_y)
+                tensor_m[li.output] = m_y
         self.apply_quantization(specs)
         return specs
 
@@ -173,7 +220,10 @@ class CNN2Gate:
 
     # ------------------------------------------------------ latency model
     def latency_report(self, board: str, n_i: int, n_l: int) -> LatencyReport:
-        """Analytical Table-1/Fig-6 latency model (see resources.py)."""
+        """Analytical Table-1/Fig-6 latency model (see resources.py).
+        Walks the DAG schedule: merge stages are pure memory traffic
+        (both operands stream once, zero MACs), so residual networks
+        report the adder path the FPGA would pay."""
         profile = FPGA_BOARDS[board]
         rows: List[LayerTiming] = []
         for li in self.parsed.layers:
@@ -190,10 +240,17 @@ class CNN2Gate:
                  f"{pm.total_ops / 1e9:.2f} GOp, "
                  f"{pm.total_weights / 1e6:.1f} M weights"]
         for li in pm.layers:
+            kind = li.kind
+            if li.is_depthwise:
+                kind = "dwconv"
+            elif li.kind == P.CONV and li.group > 1:
+                kind = f"gconv[{li.group}]"
             fused = "+relu" if li.relu else ""
             fused += "+pool" if li.pool is not None else ""
             fused += "+softmax" if li.softmax else ""
-            lines.append(f"  {li.name:<12} {li.kind}{fused:<14} "
+            ins = (f" <- {len(li.inputs)} tensors"
+                   if len(li.inputs) > 1 else "")
+            lines.append(f"  {li.name:<12} {kind}{fused:<14} "
                          f"in={li.in_shape} out={li.out_shape} "
-                         f"macs={li.macs / 1e6:.1f}M")
+                         f"macs={li.macs / 1e6:.1f}M{ins}")
         return "\n".join(lines)

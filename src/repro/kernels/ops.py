@@ -46,7 +46,7 @@ def qgemm(x, w, b=None, *, shift: int, relu: bool = False,
 
 def qconv2d_nhwc(
     x: jnp.ndarray,  # (N, H, W, Cin) int8, unpadded
-    w: jnp.ndarray,  # (KH, KW, Cin, Cout) int8 (HWIO)
+    w: jnp.ndarray,  # (KH, KW, Cin/groups, Cout) int8 (HWIO)
     b: Optional[jnp.ndarray],
     *,
     strides: Tuple[int, int] = (1, 1),
@@ -54,19 +54,66 @@ def qconv2d_nhwc(
     shift: int = 0,
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
+    groups: int = 1,
     block_cout: int = 128,
     block_h: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """TPU-layout entry point for the fused conv+ReLU+pool row-band
-    kernel.  Returns NHWC int8 (post-pool when ``pool`` is given)."""
+    kernels.  Returns NHWC int8 (post-pool when ``pool`` is given).
+
+    Dispatch on ``groups`` (ONNX Conv semantics):
+      * 1 — dense row-band MXU kernel (:func:`qconv.qconv2d`);
+      * Cin with multiplier 1 — depthwise row-band VPU kernel
+        (:func:`qconv.qdwconv2d`);
+      * anything else (ragged groups) — the exact jnp reference path
+        (:func:`ref.qconv2d_ref`), bit-identical semantics, no banding.
+    """
     interpret = default_interpret() if interpret is None else interpret
+    cin = x.shape[-1]
+    cout = w.shape[-1]
     if any(pads):
         x = jnp.pad(x, ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]),
                         (0, 0)))
-    return _qconv.qconv2d(x, w, b, strides=strides, shift=shift, relu=relu,
-                          pool=pool, block_cout=block_cout, block_h=block_h,
-                          interpret=interpret)
+    if groups == 1:
+        return _qconv.qconv2d(x, w, b, strides=strides, shift=shift,
+                              relu=relu, pool=pool, block_cout=block_cout,
+                              block_h=block_h, interpret=interpret)
+    if groups == cin and cout == cin and w.shape[2] == 1:
+        return _qconv.qdwconv2d(x, w.reshape(w.shape[0], w.shape[1], cout),
+                                b, strides=strides, shift=shift, relu=relu,
+                                pool=pool, block_c=block_cout,
+                                block_h=block_h, interpret=interpret)
+    # ragged grouped conv: reference path (exact fixed-point semantics)
+    return ref.qconv2d_ref(x, w, b, strides, shift, relu, pool,
+                           groups=groups)
+
+
+def qadd_nhwc(xs, align_shifts, *, shift: int = 0,
+              relu: bool = False) -> jnp.ndarray:
+    """Residual-merge stage: align int8 operands to a common fixed-point
+    position, add in int32, requantize back to int8.  Elementwise VPU
+    work with no reduction — XLA fuses it into the surrounding int8
+    dataflow, so a dedicated Pallas kernel would buy nothing."""
+    return ref.qadd_ref(xs, align_shifts, shift, relu)
+
+
+def qconcat_nhwc(xs, align_shifts, *, axis: int = -1,
+                 relu: bool = False) -> jnp.ndarray:
+    """Channel-merge stage: align each int8 operand to the common scale,
+    then concatenate (values are unchanged by concat, so there is no
+    output requant beyond the per-operand alignment).  ``relu`` applies
+    a fused post-merge ReLU (relu∘concat == concat∘relu per operand)."""
+    aligned = [
+        jnp.clip(ref.align_shift(x.astype(jnp.int32), s),
+                 ref.INT8_MIN, ref.INT8_MAX).astype(jnp.int8)
+        if s else x
+        for x, s in zip(xs, align_shifts)
+    ]
+    y = jnp.concatenate(aligned, axis=axis)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
 
 
 def maxpool2d_nhwc(x: jnp.ndarray, window: int, stride: int,

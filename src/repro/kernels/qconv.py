@@ -43,42 +43,19 @@ from jax.experimental.pallas import tpu as pltpu
 INT8_MIN, INT8_MAX = -128, 127
 
 
-def _qconv_band_kernel(
-    x_ref,    # (1, band_in_rows, Wp, Cin) int8 — overlapping halo band
-    w_ref,    # (KH, KW, Cin, bco) int8
-    b_ref,    # (1, bco) int32
-    o_ref,    # (1, block_h, Wo', bco) int8 (post-pool if fused)
-    acc_ref,  # VMEM scratch: (conv_rows * wo, bco) int32
-    *,
-    strides: Tuple[int, int],
-    conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
+def _band_epilogue(
+    acc,      # (conv_rows * wo, bco) int32 accumulator
+    b_row,    # (1, bco) int32 bias
+    conv_hw: Tuple[int, int],
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
 ):
-    x = x_ref[0]                      # (band_in_rows, Wp, Cin)
-    kh, kw = w_ref.shape[0], w_ref.shape[1]
-    cin = x.shape[-1]
-    bco = o_ref.shape[-1]
+    """Shared bias/requant/ReLU/max-pool tail of both band kernels —
+    identical fixed-point semantics for dense and depthwise convs."""
     ho, wo = conv_hw
-    sh, sw = strides
-
-    acc_ref[...] = jnp.zeros_like(acc_ref)
-    for i in range(kh):              # static unroll: kh*kw MXU matmuls
-        for j in range(kw):
-            patch = jax.lax.slice(
-                x,
-                (i, j, 0),
-                (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
-                (sh, sw, 1),
-            )                         # (ho, wo, cin) int8
-            acc_ref[...] += jnp.dot(
-                patch.reshape(ho * wo, cin),
-                w_ref[i, j],
-                preferred_element_type=jnp.int32,
-            )
-
-    acc = acc_ref[...] + b_ref[...].astype(jnp.int32)  # (1,bco) broadcasts
+    bco = acc.shape[-1]
+    acc = acc + b_row.astype(jnp.int32)          # (1,bco) broadcasts
     if shift > 0:
         acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
     if relu:
@@ -99,8 +76,85 @@ def _qconv_band_kernel(
                 )
                 pooled = jnp.maximum(pooled, win)
         y = pooled
+    return y
 
-    o_ref[0] = y
+
+def _qconv_band_kernel(
+    x_ref,    # (1, band_in_rows, Wp, Cin) int8 — overlapping halo band
+    w_ref,    # (KH, KW, Cin, bco) int8
+    b_ref,    # (1, bco) int32
+    o_ref,    # (1, block_h, Wo', bco) int8 (post-pool if fused)
+    acc_ref,  # VMEM scratch: (conv_rows * wo, bco) int32
+    *,
+    strides: Tuple[int, int],
+    conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
+    shift: int,
+    relu: bool,
+    pool: Optional[Tuple[int, int]],
+):
+    x = x_ref[0]                      # (band_in_rows, Wp, Cin)
+    kh, kw = w_ref.shape[0], w_ref.shape[1]
+    cin = x.shape[-1]
+    ho, wo = conv_hw
+    sh, sw = strides
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for i in range(kh):              # static unroll: kh*kw MXU matmuls
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
+                (sh, sw, 1),
+            )                         # (ho, wo, cin) int8
+            acc_ref[...] += jnp.dot(
+                patch.reshape(ho * wo, cin),
+                w_ref[i, j],
+                preferred_element_type=jnp.int32,
+            )
+
+    o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
+                              shift, relu, pool)
+
+
+def _qdwconv_band_kernel(
+    x_ref,    # (1, band_in_rows, Wp, bc) int8 — halo band, channel tile
+    w_ref,    # (KH, KW, bc) int8 — one filter tap per channel
+    b_ref,    # (1, bc) int32
+    o_ref,    # (1, block_h, Wo', bc) int8 (post-pool if fused)
+    acc_ref,  # VMEM scratch: (conv_rows * wo, bc) int32
+    *,
+    strides: Tuple[int, int],
+    conv_hw: Tuple[int, int],
+    shift: int,
+    relu: bool,
+    pool: Optional[Tuple[int, int]],
+):
+    """Depthwise variant of the row-band kernel: each output channel is
+    its own group, so the "per-group Cout tile" degenerates to a channel
+    tile and the kh*kw contraction becomes VPU multiply-accumulates
+    (channels ride the 128-wide lane axis; there is no cross-channel
+    reduction to feed the MXU)."""
+    x = x_ref[0]                      # (band_in_rows, Wp, bc)
+    kh, kw = w_ref.shape[0], w_ref.shape[1]
+    bc = o_ref.shape[-1]
+    ho, wo = conv_hw
+    sh, sw = strides
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for i in range(kh):              # static unroll: kh*kw VPU FMAs
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, bc),
+                (sh, sw, 1),
+            )                         # (ho, wo, bc) int8
+            acc_ref[...] += (patch.reshape(ho * wo, bc).astype(jnp.int32)
+                             * w_ref[i, j].astype(jnp.int32))
+
+    o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
+                              shift, relu, pool)
 
 
 def band_geometry(block_h: int, kh: int, sh: int,
@@ -217,6 +271,88 @@ def qconv2d(
     return out[:, :oh, :, :cout]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("strides", "shift", "relu", "pool", "block_c",
+                     "block_h", "interpret"),
+)
+def qdwconv2d(
+    x: jnp.ndarray,  # (N, Hp, Wp, C) int8, pre-padded (VALID conv)
+    w: jnp.ndarray,  # (KH, KW, C) int8 — one 2-D filter per channel
+    b: Optional[jnp.ndarray],  # (C,) int32
+    *,
+    strides: Tuple[int, int] = (1, 1),
+    shift: int = 0,
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,
+    block_c: int = 128,
+    block_h: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Depthwise (group == C, multiplier 1) row-banded int8 conv with the
+    same fused ReLU/requant/max-pool tail as :func:`qconv2d`.  Grid is
+    ``(batch, H/block_h, C/block_c)`` — the channel tile is the
+    per-group Cout tile with one channel per group."""
+    n, hp, wp, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2, (x.shape, w.shape)
+    sh, sw = strides
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    if b is None:
+        b = jnp.zeros((c,), jnp.int32)
+
+    bc = min(block_c, _rup(c, 128))
+    cp = _rup(c, bc)
+    if cp > c:  # zero channels: zero weights/bias keep them inert
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
+    wpad = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c)))
+    bpad = jnp.pad(b, (0, cp - c)).reshape(1, cp)
+
+    if pool is not None:
+        pwin, pstr = pool
+        oh, ow = (ho - pwin) // pstr + 1, (wo - pwin) // pstr + 1
+    else:
+        oh, ow = ho, wo
+
+    bh = min(block_h or default_block_h(oh, wo), oh)
+    conv_rows, band_in_rows, in_step = band_geometry(bh, kh, sh, pool)
+    n_bands = -(-oh // bh)
+    ohp = n_bands * bh
+    rows_needed = (n_bands - 1) * in_step + band_in_rows
+    if rows_needed > hp:
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _qdwconv_band_kernel,
+            strides=strides,
+            conv_hw=(conv_rows, wo),
+            shift=shift,
+            relu=relu,
+            pool=pool,
+        ),
+        grid=(n, n_bands, cp // bc),
+        in_specs=[
+            # Halo band, channel-tiled: unblocked element offsets (rows
+            # overlap between bands; channels advance by whole tiles).
+            pl.BlockSpec((1, band_in_rows, wp, bc),
+                         lambda ni, hi, ci: (ni, hi * in_step, 0, ci * bc),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((kh, kw, bc), lambda ni, hi, ci: (0, 0, ci)),
+            pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, ow, bc),
+                               lambda ni, hi, ci: (ni, hi, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, ohp, ow, cp), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((conv_rows * wo, bc), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wpad, bpad)
+    return out[:, :oh, :, :c]
+
+
 def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
                ho: int, wo: int, *,
                sh: int = 1,
@@ -236,6 +372,25 @@ def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
             + kh * kw * cin * bco            # w tile int8
             + 4 * conv_rows * conv_wo * bco  # acc scratch int32
             + bh * wo * bco)                 # y band int8
+
+
+def dw_vmem_bytes(wp: int, c: int, kh: int, kw: int, bc: int,
+                  ho: int, wo: int, *,
+                  sh: int = 1,
+                  sw: Optional[int] = None,
+                  block_h: Optional[int] = None,
+                  pool: Optional[Tuple[int, int]] = None) -> int:
+    """Per-grid-step working set of the depthwise row-band kernel.  The
+    input band is channel-tiled (unlike the dense kernel, which must see
+    every Cin for the contraction), so ``bc`` bounds every term."""
+    bh = min(block_h or ho, ho)
+    conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
+    conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
+    bc = min(bc, c)
+    return (band_in_rows * wp * bc           # x band int8 (channel tile)
+            + kh * kw * bc                   # per-channel taps int8
+            + 4 * conv_rows * conv_wo * bc   # acc scratch int32
+            + bh * wo * bc)                  # y band int8
 
 
 def _rup(x: int, mult: int) -> int:

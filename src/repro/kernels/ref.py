@@ -25,6 +25,15 @@ def requant(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
     return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
 
 
+def align_shift(v: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Round-half-up arithmetic right shift (no clip) — the operand
+    alignment step of a residual merge: an int8 operand at fixed-point
+    position m is moved to position m - shift."""
+    if shift > 0:
+        v = jax.lax.shift_right_arithmetic(v + (1 << (shift - 1)), shift)
+    return v
+
+
 def qgemm_ref(
     x: jnp.ndarray,  # (M, K) int8
     w: jnp.ndarray,  # (K, N) int8
@@ -40,20 +49,25 @@ def qgemm_ref(
 
 def qconv2d_ref(
     x: jnp.ndarray,  # (N, H, W, Cin) int8, already zero-padded
-    w: jnp.ndarray,  # (KH, KW, Cin, Cout) int8
+    w: jnp.ndarray,  # (KH, KW, Cin/groups, Cout) int8
     b: Optional[jnp.ndarray],  # (Cout,) int32
     strides: Tuple[int, int],
     shift: int,
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,  # (window, stride)
+    groups: int = 1,
 ) -> jnp.ndarray:
-    """Fused conv+ReLU+maxpool, NHWC/HWIO, VALID padding (pad upstream)."""
+    """Fused conv+ReLU+maxpool, NHWC/HWIO, VALID padding (pad upstream).
+    ``groups`` follows ONNX Conv semantics (groups == Cin == Cout is
+    depthwise); the int32 accumulator is exact, so this is the
+    bit-for-bit oracle for both band kernels and the grouped fallback."""
     acc = jax.lax.conv_general_dilated(
         x.astype(jnp.int32),
         w.astype(jnp.int32),
         window_strides=strides,
         padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
     )
     if b is not None:
         acc = acc + b.astype(jnp.int32)[None, None, None, :]
@@ -64,6 +78,23 @@ def qconv2d_ref(
             y, jnp.int8(INT8_MIN), jax.lax.max,
             (1, pw, pw, 1), (1, ps, ps, 1), "VALID")
     return y
+
+
+def qadd_ref(
+    xs,                      # sequence of int8 operands, same shape
+    align_shifts,            # per-operand right shifts to a common scale
+    shift: int,              # requant shift from the common scale to m_y
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Residual-merge oracle: align each int8 operand to the common
+    fixed-point position (round-half-up right shift in int32), add, then
+    requantize to the output scale.  With all shifts zero this is a pure
+    saturating int8 add."""
+    acc = None
+    for x, s in zip(xs, align_shifts):
+        v = align_shift(x.astype(jnp.int32), s)
+        acc = v if acc is None else acc + v
+    return requant(acc, shift, relu)
 
 
 def maxpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:

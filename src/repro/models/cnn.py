@@ -19,7 +19,12 @@ from repro.core import onnx_lite
 
 
 class GraphBuilder:
-    """Tiny builder DSL ("the ML framework" whose export we parse)."""
+    """Tiny builder DSL ("the ML framework" whose export we parse).
+
+    The builder threads one *current* tensor; ``tap()`` captures a
+    handle to it and ``from_tap`` rewinds, which is how branches
+    (residual skips, inception-style splits) are expressed — the emitted
+    graph is a plain ONNX-style DAG either way."""
 
     def __init__(self, name: str, input_shape: Sequence[int], seed: int = 0):
         self.name = name
@@ -35,12 +40,22 @@ class GraphBuilder:
         self._n += 1
         return f"{op.lower()}_{self._n}"
 
+    # ------------------------------------------------- branch plumbing
+    def tap(self) -> Tuple[str, Tuple[int, ...]]:
+        """Handle to the current tensor (for skips/merges)."""
+        return self.cur, self.cur_shape
+
+    def from_tap(self, handle: Tuple[str, Tuple[int, ...]]) -> "GraphBuilder":
+        """Rewind the builder to a tapped tensor (start a branch)."""
+        self.cur, self.cur_shape = handle[0], tuple(handle[1])
+        return self
+
     def conv(self, c_out: int, k: int, stride: int = 1, pad: int = 0,
-             relu: bool = True) -> "GraphBuilder":
+             relu: bool = True, group: int = 1) -> "GraphBuilder":
         name = self._name("Conv")
         c_in = self.cur_shape[1]
-        w = (self.rng.standard_normal((c_out, c_in, k, k)) *
-             np.sqrt(2.0 / (c_in * k * k))).astype(np.float32)
+        w = (self.rng.standard_normal((c_out, c_in // group, k, k)) *
+             np.sqrt(2.0 / (c_in // group * k * k))).astype(np.float32)
         b = (self.rng.standard_normal(c_out) * 0.01).astype(np.float32)
         self.inits[name + "_w"] = w
         self.inits[name + "_b"] = b
@@ -48,13 +63,44 @@ class GraphBuilder:
         self.nodes.append(Node(
             "Conv", name, [self.cur, name + "_w", name + "_b"], [out],
             {"kernel_shape": [k, k], "strides": [stride, stride],
-             "pads": [pad, pad, pad, pad], "dilations": [1, 1]}))
+             "pads": [pad, pad, pad, pad], "dilations": [1, 1],
+             "group": group}))
         self.cur = out
         h = (self.cur_shape[2] + 2 * pad - k) // stride + 1
         w_ = (self.cur_shape[3] + 2 * pad - k) // stride + 1
         self.cur_shape = (self.cur_shape[0], c_out, h, w_)
         if relu:
             self.relu()
+        return self
+
+    def dwconv(self, k: int, stride: int = 1, pad: int = 0,
+               relu: bool = True) -> "GraphBuilder":
+        """Depthwise conv (group == C, multiplier 1, MobileNet-style)."""
+        return self.conv(self.cur_shape[1], k, stride=stride, pad=pad,
+                         relu=relu, group=self.cur_shape[1])
+
+    def add_from(self, handle: Tuple[str, Tuple[int, ...]],
+                 relu: bool = True) -> "GraphBuilder":
+        """Residual merge: current tensor + tapped tensor."""
+        name = self._name("Add")
+        out = name + "_out"
+        self.nodes.append(Node("Add", name, [self.cur, handle[0]], [out]))
+        self.cur = out
+        if relu:
+            self.relu()
+        return self
+
+    def concat_from(self, *handles: Tuple[str, Tuple[int, ...]]
+                    ) -> "GraphBuilder":
+        """Channel merge: concat current tensor with tapped tensors."""
+        name = self._name("Concat")
+        out = name + "_out"
+        self.nodes.append(Node(
+            "Concat", name, [self.cur] + [h[0] for h in handles], [out],
+            {"axis": 1}))
+        c = self.cur_shape[1] + sum(h[1][1] for h in handles)
+        self.cur_shape = (self.cur_shape[0], c) + tuple(self.cur_shape[2:])
+        self.cur = out
         return self
 
     def relu(self) -> "GraphBuilder":
@@ -64,17 +110,19 @@ class GraphBuilder:
         self.cur = out
         return self
 
-    def maxpool(self, k: int, stride: Optional[int] = None) -> "GraphBuilder":
+    def maxpool(self, k: int, stride: Optional[int] = None,
+                pad: int = 0) -> "GraphBuilder":
         stride = stride or k
         name = self._name("MaxPool")
         out = name + "_out"
         self.nodes.append(Node(
             "MaxPool", name, [self.cur], [out],
             {"kernel_shape": [k, k], "strides": [stride, stride],
-             "pads": [0, 0, 0, 0]}))
+             "pads": [pad, pad, pad, pad]}))
         self.cur = out
         n, c, h, w = self.cur_shape
-        self.cur_shape = (n, c, (h - k) // stride + 1, (w - k) // stride + 1)
+        self.cur_shape = (n, c, (h + 2 * pad - k) // stride + 1,
+                          (w + 2 * pad - k) // stride + 1)
         return self
 
     def avgpool(self, k: int, stride: Optional[int] = None) -> "GraphBuilder":
@@ -185,6 +233,63 @@ def tiny_cnn_gap(batch: int = 1, num_classes: int = 10, seed: int = 0,
     return b.build()
 
 
+def _basic_block(b: GraphBuilder, c_out: int, stride: int = 1) -> None:
+    """ResNet basic block: two 3x3 convs + identity/projection skip,
+    post-add ReLU (the canonical v1 ordering)."""
+    skip = b.tap()
+    b.conv(c_out, 3, stride=stride, pad=1)
+    b.conv(c_out, 3, pad=1, relu=False)
+    main = b.tap()
+    if stride != 1 or skip[1][1] != c_out:
+        # 1x1 strided projection on the skip path (ResNet option B)
+        b.from_tap(skip).conv(c_out, 1, stride=stride, relu=False)
+        skip = b.tap()
+    b.from_tap(main).add_from(skip, relu=True)
+
+
+def resnet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
+                in_hw: int = 32) -> Graph:
+    """CIFAR-scale residual net: stem + identity block + downsample
+    block (strided projection) — the smallest graph that exercises
+    multi-consumer fan-out, residual merge and branch requantization."""
+    b = GraphBuilder("resnet_tiny", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, pad=1)
+    _basic_block(b, 16)
+    _basic_block(b, 32, stride=2)
+    b.global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def resnet18(batch: int = 1, num_classes: int = 1000, seed: int = 0) -> Graph:
+    """ResNet-18 [He et al.]: 7x7/2 stem + padded 3x3/2 max-pool, four
+    basic-block groups (64/128/256/512, two blocks each, strided
+    projection at each group boundary), GAP head."""
+    b = GraphBuilder("resnet18", (batch, 3, 224, 224), seed)
+    b.conv(64, 7, stride=2, pad=3).maxpool(3, 2, pad=1)
+    for c_out, stride in ((64, 1), (64, 1), (128, 2), (128, 1),
+                          (256, 2), (256, 1), (512, 2), (512, 1)):
+        _basic_block(b, c_out, stride)
+    b.global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def mobilenet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
+                   in_hw: int = 32) -> Graph:
+    """MobileNet-v1-style separable stack: strided stem + three
+    depthwise(3x3)+pointwise(1x1) pairs — exercises the depthwise band
+    kernel and the grouped feasibility rules."""
+    b = GraphBuilder("mobilenet_tiny", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, stride=2, pad=1)
+    for c_out, stride in ((32, 1), (64, 2), (64, 1)):
+        b.dwconv(3, stride=stride, pad=1)
+        b.conv(c_out, 1)
+    b.global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
 # ---------------------------------------------------------------------
 # Float oracle: run the graph directly with lax ops (NCHW).
 # ---------------------------------------------------------------------
@@ -256,6 +361,9 @@ def run_float(graph: Graph, x: jnp.ndarray, return_env: bool = False):
             env[n.outputs[0]] = env[n.inputs[0]].reshape([int(t) for t in target])
         elif n.op_type == "Add":
             env[n.outputs[0]] = env[n.inputs[0]] + env[n.inputs[1]]
+        elif n.op_type == "Concat":
+            env[n.outputs[0]] = jnp.concatenate(
+                [env[i] for i in n.inputs], axis=int(n.attr("axis", 1)))
         elif n.op_type in ("Dropout", "Identity"):
             env[n.outputs[0]] = env[n.inputs[0]]
         else:
