@@ -72,6 +72,15 @@ class LayerInfo:
     softmax: bool = False
     pool: Optional["LayerInfo"] = None  # fused pooling stage
     pool_type: str = "max"              # max | avg (standalone pools)
+    # residual-add epilogue fusion (conv stages only): ``merge`` is the
+    # folded Add stage (keeps its name for QuantSpec lookup, its relu
+    # flag and its original operand tensors); ``skip_input`` names the
+    # second operand — the residual the kernel adds in its epilogue.
+    # The conv's own output tensor survives inside ``merge.inputs`` as
+    # the *intermediate* the fixed-point threading still scales.
+    merge: Optional["LayerInfo"] = dataclasses.field(default=None,
+                                                     repr=False)
+    skip_input: Optional[str] = None
     # linked structure (paper: "saves layers in a linked structure")
     prev: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
     next: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
@@ -81,6 +90,14 @@ class LayerInfo:
     def input(self) -> str:
         """First (primary) input tensor — the only one for conv/pool/fc."""
         return self.inputs[0]
+
+    @property
+    def merge_intermediate(self) -> str:
+        """For a conv with a folded residual add: the merge operand the
+        conv itself produces (the tensor the unfused program would have
+        written to memory between the two stages)."""
+        a, b = self.merge.inputs
+        return b if a == self.skip_input else a
 
     @property
     def is_depthwise(self) -> bool:
@@ -214,7 +231,7 @@ def _pow2(x: int) -> bool:
     return x > 0 and (x & (x - 1)) == 0
 
 
-def parse(graph: Graph) -> ParsedModel:
+def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
     """Traverse the graph (already topologically ordered) and emit the
     scheduled DAG stage program.
 
@@ -223,7 +240,13 @@ def parse(graph: Graph) -> ParsedModel:
     no other reader — every multi-consumer tensor (residual fan-out)
     survives as a named stage output.  Unfused data-movement nodes
     become aliases; stage inputs are canonicalised through them so the
-    executor's tensor environment only ever holds stage outputs."""
+    executor's tensor environment only ever holds stage outputs.
+
+    With ``fuse_skip`` (default) a post-pass folds every eligible
+    residual ``Add`` into the conv stage producing one of its operands
+    (see :func:`_fold_skip_adds`) — the paper's keep-it-on-chip rule
+    applied to skip connections.  ``fuse_skip=False`` keeps every merge
+    a standalone stage (the bit-exact two-stage fallback program)."""
     layers: List[LayerInfo] = []
     consumed: set = set()
     alias: Dict[str, str] = {}
@@ -263,6 +286,9 @@ def parse(graph: Graph) -> ParsedModel:
 
     if not layers:
         raise ValueError(f"graph {graph.name!r} contains no compute layers")
+
+    if fuse_skip:
+        layers = _fold_skip_adds(layers, canon(graph.outputs[0]))
 
     # link the list in schedule order (the paper's order-preserving
     # structure; with branches this is the topological schedule)
@@ -423,6 +449,89 @@ def _fuse_chain(graph: Graph, li: LayerInfo, consumed: set) -> None:
             break
 
 
+def _fold_skip_adds(layers: List[LayerInfo],
+                    graph_output: Optional[str] = None) -> List[LayerInfo]:
+    """Residual-add epilogue fusion pass (the ROADMAP's add-into-conv
+    item): fold each two-operand ``Add`` into the conv stage producing
+    one of its operands, so the merge runs inside the conv kernel's
+    epilogue instead of as a standalone stage (one full int8 feature-map
+    HBM write + read saved per skip connection).
+
+    Eligibility — everything else falls back to the standalone merge
+    stage, whose numerics the fused epilogue replicates bit-for-bit:
+
+      * the host operand's producer is a *dense* conv (``group == 1``;
+        depthwise/ragged grouped producers run on other kernels);
+      * that conv's output has the Add as its **only** consumer (pipe
+        semantics — a fan-out tensor must stay addressable);
+      * the conv has no fused pool yet and matches the Add's geometry;
+      * the skip operand is already available when the host runs (its
+        producer is scheduled earlier, or it is the graph input).
+
+    When both producers qualify the later-scheduled one hosts (its
+    operand is then the freshest tensor — the ResNet projection case).
+    After folding, a single-consumer unpadded MaxPool stage straddling
+    the old Add output is absorbed as the merged stage's fused pool
+    (graph order Conv→Add→ReLU→MaxPool == epilogue order)."""
+    result = list(layers)
+    progress = True
+    while progress:
+        progress = False
+        pos = {id(li): i for i, li in enumerate(result)}
+        producer = {li.output: li for li in result}
+        n_consumers: Dict[str, int] = {}
+        for li in result:
+            for t in li.inputs:
+                n_consumers[t] = n_consumers.get(t, 0) + 1
+        for add in result:
+            if add.kind != ADD or len(add.inputs) != 2:
+                continue
+            if add.inputs[0] == add.inputs[1]:
+                continue  # x + x consumes one tensor twice: keep merged
+            if add.softmax:
+                continue  # the epilogue has no softmax: keep standalone
+            cands = []
+            for k, t in enumerate(add.inputs):
+                p = producer.get(t)
+                if (p is not None and p.kind == CONV and p.group == 1
+                        and p.pool is None and p.merge is None
+                        and not p.softmax
+                        and n_consumers.get(t, 0) == 1
+                        and t != graph_output  # the egress still reads it
+                        and p.out_shape == add.out_shape):
+                    cands.append((pos[id(p)], p, add.inputs[1 - k]))
+            host = skip_t = None
+            for _i, p, other in sorted(cands, key=lambda c: -c[0]):
+                op = producer.get(other)
+                if op is None or pos[id(op)] < pos[id(p)]:
+                    host, skip_t = p, other
+                    break
+            if host is None:
+                continue
+            host.merge = add
+            host.skip_input = skip_t
+            host.inputs = [host.inputs[0], skip_t]
+            host.output = add.output
+            host.out_shape = add.out_shape
+            result.remove(add)
+            # absorb a following single-consumer unpadded MaxPool: the
+            # epilogue pools after the merge, matching the graph order
+            pools = [l for l in result if host.output in l.inputs]
+            if (len(pools) == 1 and pools[0].kind == POOL
+                    and pools[0].pool_type == "max"
+                    and not any(pools[0].pads)
+                    and not pools[0].softmax and not pools[0].relu
+                    and host.output != graph_output):
+                pstage = pools[0]
+                host.pool = pstage
+                host.output = pstage.output
+                host.out_shape = pstage.out_shape
+                result.remove(pstage)
+            progress = True
+            break  # adjacency changed: recompute the maps
+    return result
+
+
 def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, Any]]:
     """The host-program memory access schedule of §4.2: for each pipeline
     stage, how many (N_i)-wide vectors the memory-read kernel fetches and
@@ -464,11 +573,16 @@ def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, An
             n, c_out, h, w = li.out_shape if li.pool is None else li.pool.in_shape
             kh, kw = li.kernel_shape
             vec_per_patch = -(-(li.c_in * kh * kw) // n_i)
+            read_vectors = n * h * w * vec_per_patch
+            if li.merge is not None:
+                # fused residual merge: the skip operand streams through
+                # the same memory-read kernel once (conv-out geometry)
+                read_vectors += -(-int(np.prod(li.conv_out_shape)) // n_i)
             sched.append(
                 dict(
                     layer=li.name,
                     kind=li.kind,
-                    read_vectors=n * h * w * vec_per_patch,
+                    read_vectors=read_vectors,
                     weight_vectors=c_out * vec_per_patch,
                     lanes=min(n_l, c_out),
                     write_elems=int(np.prod(li.out_shape)),

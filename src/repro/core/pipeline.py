@@ -52,6 +52,10 @@ class QuantizedLayer:
     w_q: Optional[jnp.ndarray]
     b_q: Optional[jnp.ndarray]
     operand_shifts: Tuple[int, ...] = ()
+    # conv stages with a folded residual add: the merge's own spec
+    # (requant shift from the common operand position to m_y); the
+    # operand_shifts then align (conv intermediate, skip) in that order
+    merge_spec: Optional[QuantSpec] = None
 
 
 @dataclasses.dataclass
@@ -81,8 +85,12 @@ def thread_scales(model: P.ParsedModel,
     output at ``m_y``; pools pass the scale through unchanged (both
     directions, so a pool feeding the first conv resolves too); merge
     stages output at their spec's ``m_y``, or at the minimum operand
-    position when no spec was given.  Iterated to fixpoint; raises if
-    the graph input or output never resolves (under-specified specs).
+    position when no spec was given.  A conv with a folded residual add
+    pins its *intermediate* tensor (the unfused conv output) at its own
+    ``m_y`` and its stage output at the merge spec's ``m_y`` — the same
+    two rules the unfused Conv + Add pair would apply.  Iterated to
+    fixpoint; raises if the graph input or output never resolves
+    (under-specified specs).
     """
     tensor_m: Dict[str, int] = {}
     for _ in range(len(model.layers) + 2):
@@ -100,7 +108,16 @@ def thread_scales(model: P.ParsedModel,
                 if spec is None:
                     raise KeyError(f"no QuantSpec for layer {li.name!r}")
                 _set(li.inputs[0], spec.m_x)
-                _set(li.output, spec.m_y)
+                if li.kind == P.CONV and li.merge is not None:
+                    _set(li.merge_intermediate, spec.m_y)
+                    mspec = specs.get(li.merge.name)
+                    if mspec is not None:
+                        _set(li.output, mspec.m_y)
+                    elif li.skip_input in tensor_m:
+                        _set(li.output,
+                             min(spec.m_y, tensor_m[li.skip_input]))
+                else:
+                    _set(li.output, spec.m_y)
             elif li.kind == P.POOL:
                 if li.inputs[0] in tensor_m:
                     _set(li.output, tensor_m[li.inputs[0]])
@@ -171,8 +188,25 @@ def build_quantized(model: P.ParsedModel,
         b = model.graph.initializers[li.bias] if li.bias else None
         w_q, b_q = (None, None)
         operand_shifts: Tuple[int, ...] = ()
+        merge_spec: Optional[QuantSpec] = None
         if li.kind == P.CONV:
             _check_group(li)
+        if li.kind == P.CONV and li.merge is not None:
+            # folded residual add: same shift-only alignment rules as a
+            # standalone merge, operands = (conv intermediate, skip)
+            m_ops = (tensor_m[li.merge_intermediate],
+                     tensor_m[li.skip_input])
+            merge_spec = specs.get(li.merge.name)
+            if merge_spec is None:
+                m_common = min(m_ops)
+                merge_spec = QuantSpec(m_w=0, m_x=m_common, m_y=m_common)
+            operand_shifts = tuple(m - merge_spec.m_x for m in m_ops)
+            if any(s < 0 for s in operand_shifts):
+                raise ValueError(
+                    f"fused merge {li.merge.name!r}: operand position "
+                    f"below the common scale m={merge_spec.m_x} (shifts "
+                    f"{operand_shifts}) — shift-only alignment cannot "
+                    "scale up")
         if li.kind in (P.ADD, P.CONCAT):
             m_ops = [tensor_m[t] for t in li.inputs]
             if spec is None:
@@ -189,7 +223,8 @@ def build_quantized(model: P.ParsedModel,
             prev_info = model.stage_producing(li.inputs[0])
             w_q = jnp.asarray(_stage_weights(li, prev_info, w_q))
             b_q = jnp.asarray(b_q) if b_q is not None else None
-        layers.append(QuantizedLayer(li, spec, w_q, b_q, operand_shifts))
+        layers.append(QuantizedLayer(li, spec, w_q, b_q, operand_shifts,
+                                     merge_spec))
     return QuantizedModel(
         name=model.name,
         layers=layers,
@@ -217,10 +252,18 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
 
     (N_i, N_l, block_h) select kernel tile shapes: N_l lanes ->
     output-channel tile (x8: eight 8-bit MACs per lane-vector element
-    feed one MXU row), N_i -> contraction granularity, block_h -> the
-    conv kernel's row-band height (the line-buffer depth of DESIGN.md
-    §2).  Functionally the result is identical for every option —
-    options trade resources for speed, exactly as in the paper.
+    feed one MXU row), N_i -> ``block_cin = 8*N_i`` input-channel
+    contraction tile (the conv kernel's innermost grid axis and the FC
+    kernel's K tile — a real blocking knob, not just an analytical
+    report), block_h -> the conv kernel's row-band height (the
+    line-buffer depth of DESIGN.md §2).  Functionally the result is
+    identical for every option — options trade resources for speed,
+    exactly as in the paper.
+
+    Conv stages with a folded residual add (``li.merge``) feed the skip
+    operand straight into the kernel epilogue — no standalone add stage
+    exists in the jitted program, so the merged feature map never
+    round-trips through HBM between conv and add.
 
     Buffer release is liveness-based: the stage index of each tensor's
     last consumer is precomputed, and the environment drops a tensor as
@@ -229,6 +272,7 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     rules score, not one threaded activation.
     """
     block_cout = max(8 * n_l, 8)
+    block_cin = max(8 * n_i, 8)
     stages = qm.layers
     out_name = qm.parsed.output_name
     in_name = qm.parsed.input_name
@@ -252,12 +296,19 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                 pool = None
                 if li.pool is not None:
                     pool = (li.pool.kernel_shape[0], li.pool.strides[0])
+                merge_kw = {}
+                if li.merge is not None:  # residual add in the epilogue
+                    merge_kw = dict(
+                        skip=env[li.skip_input],
+                        skip_shifts=ql.operand_shifts,
+                        merge_shift=ql.merge_spec.requant_shift,
+                        merge_relu=li.merge.relu)
                 h = ops.qconv2d_nhwc(
                     env[li.inputs[0]], ql.w_q, ql.b_q,
                     strides=li.strides, pads=li.pads,
                     shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
                     groups=li.group, block_cout=block_cout, block_h=block_h,
-                    interpret=interpret)
+                    block_cin=block_cin, interpret=interpret, **merge_kw)
             elif li.kind == P.POOL:
                 pool_fn = (ops.avgpool2d_nhwc if li.pool_type == "avg"
                            else ops.maxpool2d_nhwc)
@@ -271,8 +322,8 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                 h = ops.qgemm(h, ql.w_q, ql.b_q,
                               shift=ql.spec.requant_shift,
                               relu=li.relu,
-                              block_n=min(128, max(8 * n_l, 8)),
-                              block_k=128,
+                              block_n=min(128, block_cout),
+                              block_k=min(128, block_cin),
                               interpret=interpret)
             elif li.kind == P.ADD:
                 h = ops.qadd_nhwc([env[t] for t in li.inputs],
@@ -327,6 +378,10 @@ def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
             in_b = int(np.prod(li.out_shape))
         return in_b, 0, int(np.prod(li.out_shape))
     in_b = int(np.prod(li.in_shape))
+    if li.kind == P.CONV and li.merge is not None:
+        # fused residual merge: the skip operand streams in once; the
+        # intermediate conv result never touches memory at all
+        in_b += int(np.prod(li.conv_out_shape))
     w_b = li.weight_count()
     out_b = int(np.prod(li.out_shape))
     return in_b, w_b, out_b

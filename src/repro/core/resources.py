@@ -116,19 +116,24 @@ VMEM_BUDGET_BYTES = 16 * 1024 ** 2
 
 
 def conv_band_working_set(layers, n_l: int,
-                          block_h: Optional[int]) -> int:
+                          block_h: Optional[int],
+                          n_i: Optional[int] = None) -> int:
     """Peak per-grid-step VMEM bytes of the row-tiled kernels across the
     model's stage program (the quantity the DSE must keep under the
     on-chip budget — the paper's line-buffer/block-RAM sizing, §3.2.2).
 
     ``layers`` is the parsed ``LayerInfo`` schedule; ``n_l`` maps to the
     output-channel tile exactly as the executor maps it
-    (``block_cout = 8 * N_l``); ``block_h=None`` scores the untiled
+    (``block_cout = 8 * N_l``) and ``n_i`` to the dense kernel's Cin
+    contraction tile (``block_cin = 8 * N_i``; ``None`` scores the
+    whole-Cin contraction); ``block_h=None`` scores the untiled
     whole-plane kernel.  Beyond dense convs the feasibility rule covers:
 
+      * dense convs with a fused residual merge — the conv band plus
+        the ``skip_vmem_bytes`` band the epilogue holds alongside it;
       * depthwise convs — the channel-tiled band of ``dw_vmem_bytes``
-        (the input band shrinks with the channel tile, unlike the dense
-        contraction which must see every Cin);
+        (the input band shrinks with the channel tile, like the dense
+        kernel's ``block_cin`` slice);
       * ragged grouped convs — the reference path's whole-plane set
         (no banding: x plane + weights + int32 accumulator + output);
       * residual/concat merges — every operand band plus the int32
@@ -138,6 +143,7 @@ def conv_band_working_set(layers, n_l: int,
     from repro.kernels import qconv  # kernels never import core: no cycle
 
     block_cout = max(8 * n_l, 8)
+    block_cin = max(8 * n_i, 8) if n_i else None
     peak = 0
     for li in layers:
         if li.kind in ("add", "concat"):
@@ -174,7 +180,8 @@ def conv_band_working_set(layers, n_l: int,
             bco = min(block_cout, -(-cout // 128) * 128)
             ws = qconv.vmem_bytes(
                 hp, wp, cin, kh, kw, bco, oh, ow,
-                sh=sh, sw=sw, block_h=block_h, pool=pool)
+                sh=sh, sw=sw, block_h=block_h, pool=pool,
+                block_cin=block_cin, skip=li.merge is not None)
         peak = max(peak, ws)
     return peak
 

@@ -37,10 +37,13 @@ class CNNDesignSpace(DesignSpace):
     row-band working set (``conv_band_working_set``) against the
     board's on-chip memory, so options whose band does not fit are
     rejected exactly like any over-quota option in Algorithm 1.  The
-    working-set rule covers the whole DAG stage program — dense,
-    depthwise and ragged grouped convs plus residual/concat merge
-    buffers (resources.py) — so branchy models prune the same way
-    linear ones do.
+    working-set rule covers the whole DAG stage program — dense convs
+    (Cin-sliced by the ``8*N_i`` contraction tile, plus the skip band
+    when a residual add is fused into the epilogue), depthwise and
+    ragged grouped convs, and residual/concat merge buffers
+    (resources.py) — so branchy models prune the same way linear ones
+    do, and both parallelism degrees shape the scored band exactly as
+    they shape the executor's kernel tiles.
     """
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,
@@ -76,7 +79,10 @@ class CNNDesignSpace(DesignSpace):
         rep = estimate_fpga(self.board, ni, nl, self.weight_bytes)
         if self._bh is None:
             return rep
-        band_bytes = conv_band_working_set(self.model.layers, nl, option[2])
+        # the Cin tile (8*N_i) and the Cout tile (8*N_l) both bound the
+        # band the same way the executor's kernel tiles do
+        band_bytes = conv_band_working_set(self.model.layers, nl, option[2],
+                                           n_i=ni)
         band_pct = 100.0 * (8 * band_bytes) / self.board.mem_bits
         percents = dict(rep.percents)
         percents["mem"] = max(percents["mem"], band_pct)

@@ -76,8 +76,10 @@ class CNN2Gate:
 
     # ---------------------------------------------------------- front end
     @classmethod
-    def from_graph(cls, graph: Graph) -> "CNN2Gate":
-        return cls(P.parse(graph))
+    def from_graph(cls, graph: Graph, fuse_skip: bool = True) -> "CNN2Gate":
+        """``fuse_skip=False`` keeps residual adds as standalone merge
+        stages — the bit-exact fallback/benchmark baseline program."""
+        return cls(P.parse(graph, fuse_skip=fuse_skip))
 
     @classmethod
     def from_file(cls, path: str) -> "CNN2Gate":
@@ -120,9 +122,14 @@ class CNN2Gate:
         weights = pm.graph.initializers
 
         # pass 1: per-tensor desired positions from activation stats
+        # (conv stages with a folded residual add still thread their
+        # intermediate tensor — it lives on in li.merge.inputs)
         desired: Dict[str, int] = {}
         for li in pm.layers:
-            for t in list(li.inputs) + [li.output]:
+            tensors = list(li.inputs) + [li.output]
+            if li.merge is not None:
+                tensors += list(li.merge.inputs) + [li.merge.output]
+            for t in tensors:
                 if t not in desired:
                     desired[t] = best_pow2_exponent(acts[t])
         desired.setdefault(pm.input_name,
@@ -133,10 +140,14 @@ class CNN2Gate:
         while changed:
             changed = False
             for li in pm.layers:
-                if li.kind not in (P.ADD, P.CONCAT):
+                if li.kind in (P.ADD, P.CONCAT):
+                    operands = li.inputs
+                elif li.merge is not None:
+                    operands = li.merge.inputs
+                else:
                     continue
-                m = min(desired[t] for t in li.inputs)
-                for t in li.inputs:
+                m = min(desired[t] for t in operands)
+                for t in operands:
                     if desired[t] != m:
                         desired[t] = m
                         changed = True
@@ -148,8 +159,21 @@ class CNN2Gate:
             if li.kind in (P.CONV, P.FC):
                 m_w = best_pow2_exponent(weights[li.weight])
                 m_x = tensor_m[li.inputs[0]]
-                m_y = min(desired[li.output], m_w + m_x)
-                specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
+                if li.merge is not None:
+                    # the conv's own spec scales its intermediate tensor;
+                    # the folded merge gets the same spec a standalone
+                    # Add stage would have received
+                    m_int = min(desired[li.merge_intermediate], m_w + m_x)
+                    specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_int)
+                    m_common = min(m_int, tensor_m[li.skip_input])
+                    # scale from the *merge* output stats (an absorbed
+                    # max-pool passes scale through, as when standalone)
+                    m_y = min(desired[li.merge.output], m_common)
+                    specs[li.merge.name] = QuantSpec(
+                        m_w=0, m_x=m_common, m_y=m_y)
+                else:
+                    m_y = min(desired[li.output], m_w + m_x)
+                    specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
                 tensor_m[li.output] = m_y
             elif li.kind == P.POOL:
                 tensor_m[li.output] = tensor_m[li.inputs[0]]

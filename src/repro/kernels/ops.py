@@ -57,6 +57,11 @@ def qconv2d_nhwc(
     groups: int = 1,
     block_cout: int = 128,
     block_h: Optional[int] = None,
+    block_cin: Optional[int] = None,
+    skip: Optional[jnp.ndarray] = None,
+    skip_shifts: Tuple[int, int] = (0, 0),
+    merge_shift: int = 0,
+    merge_relu: bool = False,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """TPU-layout entry point for the fused conv+ReLU+pool row-band
@@ -68,7 +73,11 @@ def qconv2d_nhwc(
         (:func:`qconv.qdwconv2d`);
       * anything else (ragged groups) — the exact jnp reference path
         (:func:`ref.qconv2d_ref`), bit-identical semantics, no banding.
-    """
+
+    ``block_cin`` tiles the dense kernel's Cin contraction (the DSE's
+    ``N_i`` axis); ``skip`` fuses a residual add into the epilogue
+    (dense kernel only — the parser never folds merges onto depthwise
+    or ragged grouped producers)."""
     interpret = default_interpret() if interpret is None else interpret
     cin = x.shape[-1]
     cout = w.shape[-1]
@@ -78,7 +87,11 @@ def qconv2d_nhwc(
     if groups == 1:
         return _qconv.qconv2d(x, w, b, strides=strides, shift=shift,
                               relu=relu, pool=pool, block_cout=block_cout,
-                              block_h=block_h, interpret=interpret)
+                              block_h=block_h, block_cin=block_cin,
+                              skip=skip, skip_shifts=skip_shifts,
+                              merge_shift=merge_shift, merge_relu=merge_relu,
+                              interpret=interpret)
+    assert skip is None, "skip fusion requires the dense band kernel"
     if groups == cin and cout == cin and w.shape[2] == 1:
         return _qconv.qdwconv2d(x, w.reshape(w.shape[0], w.shape[1], cout),
                                 b, strides=strides, shift=shift, relu=relu,
@@ -134,14 +147,13 @@ def avgpool2d_nhwc(x: jnp.ndarray, window: int, stride: int,
     """Standalone int8-native NHWC average-pool (AveragePool /
     GlobalAveragePool): int32 window sum, round-half-up divide — the
     fixed-point scale is unchanged, so the result feeds the next int8
-    stage directly."""
-    summed = jax.lax.reduce_window(
-        x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
-        (1, window, window, 1), (1, stride, stride, 1),
-        ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0)))
-    count = window * window
-    q = jnp.floor_divide(summed + count // 2, count)
-    return jnp.clip(q, ref.INT8_MIN, ref.INT8_MAX).astype(jnp.int8)
+    stage directly.
+
+    Padded windows divide by the **real** window population (the ONNX
+    ``count_include_pad=0`` default), not by ``window*window`` — a
+    border window that covers only 4 of 9 taps averages those 4, so pad
+    pixels never drag the mean toward zero."""
+    return ref.avgpool2d_ref(x, window, stride, pads)
 
 
 # -------------------------------------- ONNX-layout (NCHW) compatibility

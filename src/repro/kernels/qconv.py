@@ -11,24 +11,41 @@ shifted int8 matmuls on the MXU (im2col-free sliced dot products).
 Parallelism parameters map onto the paper's degrees of freedom
 (DESIGN.md §2 table):
   * ``N_l`` (compute lanes)      -> ``block_cout`` (output-channel tile)
-  * ``N_i`` (input vector width) -> the Cin contraction width (whole Cin
-    per dot here; the DSE scores VMEM pressure of both).
+  * ``N_i`` (input vector width) -> ``block_cin`` (input-channel
+    contraction tile, ``8·N_i``: eight int8 elements per lane-vector
+    word feed one MXU column — a real grid axis, not just a model knob)
   * line-buffer depth            -> ``block_h`` (row-band tile)
 
-Grid: ``(batch, H/block_h, Cout/block_cout)``, iterated with the
-output-channel tile innermost.  Each step sees one **row band** of the
-input — ``block_h`` output rows plus the halo the band needs (kh-1 conv
-rows, and when a max-pool is fused, the pool-window carry rows, so the
-fused pool stays bit-exact across band boundaries).  The band window
-*overlaps* its neighbours by the halo, which a blocked BlockSpec cannot
-express; the input spec therefore uses unblocked (element-offset)
-indexing.  Because the input index map ignores the Cout grid axis, the
-band stays resident in VMEM while the weight tiles cycle — the old
-whole-plane kernel re-fetched the entire input per Cout tile.  The
-int32 accumulator lives in explicit VMEM scratch, and
+Grid: ``(batch, H/block_h, Cout/block_cout, Cin/block_cin)``, iterated
+with the Cin contraction tile innermost.  Each step sees one **row
+band** of the input — ``block_h`` output rows plus the halo the band
+needs (kh-1 conv rows, and when a max-pool is fused, the pool-window
+carry rows, so the fused pool stays bit-exact across band boundaries)
+— restricted to one ``block_cin`` channel slice, so per-step VMEM no
+longer scales with the whole Cin (wide VGG/ResNet layers fit deeper
+bands).  The band window *overlaps* its neighbours by the halo, which
+a blocked BlockSpec cannot express; the input spec therefore uses
+unblocked (element-offset) indexing.  Because the input index map
+ignores the Cout grid axis, the band slice stays resident in VMEM
+while the weight tiles cycle — the old whole-plane kernel re-fetched
+the entire input per Cout tile.  The int32 accumulator lives in
+explicit VMEM scratch and is carried across the Cin steps
+(qgemm-style ``pl.when`` init/accumulate/finish), and
 ``dimension_semantics`` tells Mosaic the batch/band axes are parallel
 so it double-buffers the next band's DMA behind the current band's
 matmuls.
+
+Epilogue skip operand (residual-add fusion): the final Cin step may
+add an int8 **skip** feature map into the band before the merge
+requantization — the residual ``Add`` of a ResNet block executed
+inside the conv kernel's epilogue instead of as a standalone stage
+(one whole feature-map HBM write+read saved per skip connection; the
+paper's §3.2.3 "never leave the pipe" argument applied to the skip
+path).  The math replicates the unfused two-stage program bit-for-bit:
+the conv result is requantized and *clipped to int8* first (exactly
+the tensor the standalone conv stage would have produced), then both
+operands are alignment-shifted in int32, added, and requantized to
+the merge output scale — see ``_band_epilogue``.
 """
 from __future__ import annotations
 
@@ -43,6 +60,14 @@ from jax.experimental.pallas import tpu as pltpu
 INT8_MIN, INT8_MAX = -128, 127
 
 
+def _round_shift(v, shift: int):
+    """Round-half-up arithmetic right shift (the paper's requant and
+    the merge alignment step share this primitive)."""
+    if shift > 0:
+        v = jax.lax.shift_right_arithmetic(v + (1 << (shift - 1)), shift)
+    return v
+
+
 def _band_epilogue(
     acc,      # (conv_rows * wo, bco) int32 accumulator
     b_row,    # (1, bco) int32 bias
@@ -50,17 +75,37 @@ def _band_epilogue(
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
+    skip=None,                       # (conv_rows * wo, bco) int8 or None
+    skip_shifts: Tuple[int, int] = (0, 0),
+    merge_shift: int = 0,
+    merge_relu: bool = False,
 ):
     """Shared bias/requant/ReLU/max-pool tail of both band kernels —
-    identical fixed-point semantics for dense and depthwise convs."""
+    identical fixed-point semantics for dense and depthwise convs.
+
+    With ``skip`` the tail replicates the unfused Conv→Add two-stage
+    program exactly: the conv accumulator is requantized and clipped to
+    int8 (the tensor the standalone conv would have written to HBM),
+    then conv result and skip are alignment-shifted to the merge's
+    common fixed-point position in int32, added, and requantized with
+    ``merge_shift``/``merge_relu``.  A fused max-pool always runs last
+    (post-merge), matching the graph order Conv→Add→(ReLU)→MaxPool."""
     ho, wo = conv_hw
     bco = acc.shape[-1]
     acc = acc + b_row.astype(jnp.int32)          # (1,bco) broadcasts
-    if shift > 0:
-        acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
+    acc = _round_shift(acc, shift)
     if relu:
         acc = jnp.maximum(acc, 0)
-    y = jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8).reshape(ho, wo, bco)
+    acc = jnp.clip(acc, INT8_MIN, INT8_MAX)      # int8 range, int32 carrier
+    if skip is not None:
+        a_conv, a_skip = skip_shifts
+        acc = (_round_shift(acc, a_conv)
+               + _round_shift(skip.astype(jnp.int32), a_skip))
+        acc = _round_shift(acc, merge_shift)
+        if merge_relu:
+            acc = jnp.maximum(acc, 0)
+        acc = jnp.clip(acc, INT8_MIN, INT8_MAX)
+    y = acc.astype(jnp.int8).reshape(ho, wo, bco)
 
     if pool is not None:
         pw, ps = pool
@@ -80,41 +125,67 @@ def _band_epilogue(
 
 
 def _qconv_band_kernel(
-    x_ref,    # (1, band_in_rows, Wp, Cin) int8 — overlapping halo band
-    w_ref,    # (KH, KW, Cin, bco) int8
+    x_ref,    # (1, band_in_rows, Wp, bci) int8 — halo band, Cin slice
+    w_ref,    # (KH, KW, bci, bco) int8
     b_ref,    # (1, bco) int32
-    o_ref,    # (1, block_h, Wo', bco) int8 (post-pool if fused)
-    acc_ref,  # VMEM scratch: (conv_rows * wo, bco) int32
-    *,
+    *rest,    # [skip_ref (1, conv_rows, Wo, bco) int8,] o_ref, acc_ref
     strides: Tuple[int, int],
     conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
+    cin_steps: int,
+    has_skip: bool,
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
+    skip_shifts: Tuple[int, int],
+    merge_shift: int,
+    merge_relu: bool,
 ):
-    x = x_ref[0]                      # (band_in_rows, Wp, Cin)
+    if has_skip:
+        skip_ref, o_ref, acc_ref = rest
+    else:
+        skip_ref, (o_ref, acc_ref) = None, rest
+    x = x_ref[0]                      # (band_in_rows, Wp, bci)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
-    cin = x.shape[-1]
+    bci = x.shape[-1]
     ho, wo = conv_hw
     sh, sw = strides
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] = jnp.zeros_like(acc_ref)
-    for i in range(kh):              # static unroll: kh*kw MXU matmuls
-        for j in range(kw):
-            patch = jax.lax.slice(
-                x,
-                (i, j, 0),
-                (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
-                (sh, sw, 1),
-            )                         # (ho, wo, cin) int8
-            acc_ref[...] += jnp.dot(
-                patch.reshape(ho * wo, cin),
-                w_ref[i, j],
-                preferred_element_type=jnp.int32,
-            )
+    def _accumulate():
+        for i in range(kh):          # static unroll: kh*kw MXU matmuls
+            for j in range(kw):
+                patch = jax.lax.slice(
+                    x,
+                    (i, j, 0),
+                    (i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, bci),
+                    (sh, sw, 1),
+                )                     # (ho, wo, bci) int8
+                acc_ref[...] += jnp.dot(
+                    patch.reshape(ho * wo, bci),
+                    w_ref[i, j],
+                    preferred_element_type=jnp.int32,
+                )
 
-    o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
-                              shift, relu, pool)
+    def _finish():
+        skip = (skip_ref[0].reshape(ho * wo, -1)
+                if skip_ref is not None else None)
+        o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
+                                  shift, relu, pool, skip=skip,
+                                  skip_shifts=skip_shifts,
+                                  merge_shift=merge_shift,
+                                  merge_relu=merge_relu)
+
+    if cin_steps == 1:
+        # whole-Cin contraction: straight-line, no per-step conditionals
+        _init()
+        _accumulate()
+        _finish()
+    else:
+        ci = pl.program_id(3)         # Cin contraction step (innermost)
+        pl.when(ci == 0)(_init)
+        _accumulate()
+        pl.when(ci == cin_steps - 1)(_finish)
 
 
 def _qdwconv_band_kernel(
@@ -195,7 +266,8 @@ def default_block_h(oh: int, wo: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("strides", "shift", "relu", "pool", "block_cout",
-                     "block_h", "interpret"),
+                     "block_h", "block_cin", "skip_shifts", "merge_shift",
+                     "merge_relu", "interpret"),
 )
 def qconv2d(
     x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
@@ -208,8 +280,18 @@ def qconv2d(
     pool: Optional[Tuple[int, int]] = None,
     block_cout: int = 128,
     block_h: Optional[int] = None,
+    block_cin: Optional[int] = None,
+    skip: Optional[jnp.ndarray] = None,  # (N, Ho, Wo, Cout) int8 residual
+    skip_shifts: Tuple[int, int] = (0, 0),
+    merge_shift: int = 0,
+    merge_relu: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """Row-banded fused int8 conv.  ``block_cin=None`` contracts the
+    whole Cin per grid step (the pre-tiling behaviour); otherwise the
+    contraction runs in ``block_cin``-channel slices on an extra
+    (innermost) grid axis.  ``skip`` is an optional residual operand in
+    the *conv output* geometry (pre-pool); see ``_band_epilogue``."""
     n, hp, wp, cin = x.shape
     kh, kw, cin2, cout = w.shape
     assert cin == cin2, (x.shape, w.shape)
@@ -223,6 +305,13 @@ def qconv2d(
     coutp = _rup(cout, bco)
     wpad = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
     bpad = jnp.pad(b, (0, coutp - cout)).reshape(1, coutp)
+
+    bci = min(block_cin or cin, cin)
+    cinp = _rup(cin, bci)
+    cin_steps = cinp // bci
+    if cinp > cin:  # zero channels contribute nothing to the dot
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cinp - cin)))
+        wpad = jnp.pad(wpad, ((0, 0), (0, 0), (0, cinp - cin), (0, 0)))
 
     if pool is not None:
         pwin, pstr = pool
@@ -240,34 +329,60 @@ def qconv2d(
     if rows_needed > hp:
         x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
 
+    in_specs = [
+        # Overlapping halo bands: element-offset (unblocked) indexing;
+        # the map ignores `co`, so the band slice stays resident across
+        # the Cout tiles (no per-tile input re-read).
+        pl.BlockSpec((1, band_in_rows, wp, bci),
+                     lambda ni, hi, co, ci: (ni, hi * in_step, 0, ci * bci),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((kh, kw, bci, bco),
+                     lambda ni, hi, co, ci: (0, 0, ci, co)),
+        pl.BlockSpec((1, bco), lambda ni, hi, co, ci: (0, co)),
+    ]
+    operands = [x, wpad, bpad]
+    if skip is not None:
+        assert skip.shape == (n, ho, wo, cout), (skip.shape, (n, ho, wo, cout))
+        # Conv-row band of the residual operand.  Bands of conv rows
+        # overlap when a pool is fused (the pool-window carry), so the
+        # skip spec is unblocked too; its rows step by the *conv* row
+        # stride between bands (= in_step / conv stride).
+        conv_step = bh * (pool[1] if pool is not None else 1)
+        skip_rows = (n_bands - 1) * conv_step + conv_rows
+        skip = jnp.pad(skip, ((0, 0), (0, max(0, skip_rows - ho)),
+                              (0, 0), (0, coutp - cout)))
+        in_specs.append(
+            pl.BlockSpec((1, conv_rows, wo, bco),
+                         lambda ni, hi, co, ci: (ni, hi * conv_step, 0,
+                                                 co * bco),
+                         indexing_mode=pl.unblocked))
+        operands.append(skip)
+
     out = pl.pallas_call(
         functools.partial(
             _qconv_band_kernel,
             strides=strides,
             conv_hw=(conv_rows, wo),
+            cin_steps=cin_steps,
+            has_skip=skip is not None,
             shift=shift,
             relu=relu,
             pool=pool,
+            skip_shifts=skip_shifts,
+            merge_shift=merge_shift,
+            merge_relu=merge_relu,
         ),
-        grid=(n, n_bands, coutp // bco),
-        in_specs=[
-            # Overlapping halo bands: element-offset (unblocked)
-            # indexing; the map ignores `co`, so the band stays resident
-            # across the Cout tiles (no per-tile input re-read).
-            pl.BlockSpec((1, band_in_rows, wp, cin),
-                         lambda ni, hi, co: (ni, hi * in_step, 0, 0),
-                         indexing_mode=pl.unblocked),
-            pl.BlockSpec((kh, kw, cin, bco), lambda ni, hi, co: (0, 0, 0, co)),
-            pl.BlockSpec((1, bco), lambda ni, hi, co: (0, co)),
-        ],
+        grid=(n, n_bands, coutp // bco, cin_steps),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, ow, bco),
-                               lambda ni, hi, co: (ni, hi, 0, co)),
+                               lambda ni, hi, co, ci: (ni, hi, 0, co)),
         out_shape=jax.ShapeDtypeStruct((n, ohp, ow, coutp), jnp.int8),
         scratch_shapes=[pltpu.VMEM((conv_rows * wo, bco), jnp.int32)],
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
         interpret=interpret,
-    )(x, wpad, bpad)
+    )(*operands)
     return out[:, :oh, :, :cout]
 
 
@@ -353,25 +468,54 @@ def qdwconv2d(
     return out[:, :oh, :, :c]
 
 
+def band_input_bytes(hp: int, wp: int, cin: int, kh: int, ho: int, *,
+                     sh: int = 1,
+                     block_h: Optional[int] = None,
+                     pool: Optional[Tuple[int, int]] = None,
+                     block_cin: Optional[int] = None) -> int:
+    """int8 bytes of the input halo band one grid step holds in VMEM —
+    the term the Cin contraction tile bounds (``block_cin=None`` means
+    the whole-Cin contraction: the band carries every input channel)."""
+    bh = min(block_h or ho, ho)
+    _conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
+    band_in_rows = min(band_in_rows, hp)
+    return band_in_rows * wp * min(block_cin or cin, cin)
+
+
 def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
                ho: int, wo: int, *,
                sh: int = 1,
                sw: Optional[int] = None,
                block_h: Optional[int] = None,
-               pool: Optional[Tuple[int, int]] = None) -> int:
+               pool: Optional[Tuple[int, int]] = None,
+               block_cin: Optional[int] = None,
+               skip: bool = False) -> int:
     """Per-grid-step working-set estimate used by the DSE resource
-    model: one halo row band + weight tile + int32 accumulator scratch +
-    output band.  ``ho``/``wo`` are *final* output rows/cols (post-pool
-    when ``pool`` is fused); ``block_h=None`` means untiled (the whole
-    plane in one band — the old kernel's working set)."""
+    model: one halo row band (one Cin slice of it when ``block_cin`` is
+    set) + weight tile + int32 accumulator scratch + output band, plus
+    the residual skip band (``skip_vmem_bytes``) when a residual add is
+    fused into the epilogue.  ``ho``/``wo`` are *final* output
+    rows/cols (post-pool when ``pool`` is fused); ``block_h=None``
+    means untiled (the whole plane in one band — the old kernel's
+    working set)."""
     bh = min(block_h or ho, ho)
-    conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
-    band_in_rows = min(band_in_rows, hp)
+    conv_rows, _band_in_rows, _step = band_geometry(bh, kh, sh, pool)
+    bci = min(block_cin or cin, cin)
     conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
-    return (band_in_rows * wp * cin          # x band int8
-            + kh * kw * cin * bco            # w tile int8
+    return (band_input_bytes(hp, wp, cin, kh, ho, sh=sh, block_h=block_h,
+                             pool=pool, block_cin=block_cin)  # x band int8
+            + kh * kw * bci * bco            # w tile int8
             + 4 * conv_rows * conv_wo * bco  # acc scratch int32
-            + bh * wo * bco)                 # y band int8
+            + bh * wo * bco                  # y band int8
+            + skip_vmem_bytes(conv_rows, conv_wo, bco, skip))
+
+
+def skip_vmem_bytes(conv_rows: int, conv_wo: int, bco: int,
+                    skip: bool = True) -> int:
+    """int8 bytes of the residual skip band a fused-merge grid step
+    holds alongside the conv working set (conv-output geometry,
+    pre-pool)."""
+    return conv_rows * conv_wo * bco if skip else 0
 
 
 def dw_vmem_bytes(wp: int, c: int, kh: int, kw: int, bc: int,

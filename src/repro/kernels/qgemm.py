@@ -81,6 +81,12 @@ def qgemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        # M/N tiles are independent; only the K walk carries the
+        # accumulator — lets Mosaic double-buffer the K-tile DMAs
+        # behind the current tile's matmul (the conv kernels already
+        # declare this; the FC kernel was the only one missing it)
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp, bp)
     return out[:m, :n]

@@ -104,14 +104,28 @@ def maxpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
         (1, window, window, 1), (1, stride, stride, 1), "VALID")
 
 
-def avgpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+def avgpool2d_ref(x: jnp.ndarray, window: int, stride: int,
+                  pads: Tuple[int, int, int, int] = (0, 0, 0, 0)
+                  ) -> jnp.ndarray:
     """Standalone int8 NHWC average-pool: int32 sum, round-half-up
-    divide (fixed-point semantics — the scale is unchanged)."""
+    divide (fixed-point semantics — the scale is unchanged).  Padded
+    windows divide by the real window population (the ONNX
+    ``count_include_pad=0`` default): the per-window divisor is the
+    number of non-pad taps, computed by pooling an all-ones plane with
+    zero padding."""
+    padding = ((0, 0), (pads[0], pads[2]), (pads[1], pads[3]), (0, 0))
+    dims, strides = (1, window, window, 1), (1, stride, stride, 1)
     summed = jax.lax.reduce_window(
         x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
-        (1, window, window, 1), (1, stride, stride, 1), "VALID")
-    count = window * window
-    q = jnp.floor_divide(summed + count // 2, count)
+        dims, strides, padding)
+    if any(pads):
+        counts = jax.lax.reduce_window(
+            jnp.ones(x.shape[1:3], jnp.int32)[None, :, :, None],
+            jnp.int32(0), jax.lax.add, dims, strides, padding)
+        q = jnp.floor_divide(summed + counts // 2, counts)
+    else:
+        count = window * window
+        q = jnp.floor_divide(summed + count // 2, count)
     return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
 
 

@@ -125,17 +125,19 @@ class GraphBuilder:
                           (w + 2 * pad - k) // stride + 1)
         return self
 
-    def avgpool(self, k: int, stride: Optional[int] = None) -> "GraphBuilder":
+    def avgpool(self, k: int, stride: Optional[int] = None,
+                pad: int = 0) -> "GraphBuilder":
         stride = stride or k
         name = self._name("AveragePool")
         out = name + "_out"
         self.nodes.append(Node(
             "AveragePool", name, [self.cur], [out],
             {"kernel_shape": [k, k], "strides": [stride, stride],
-             "pads": [0, 0, 0, 0]}))
+             "pads": [pad, pad, pad, pad]}))
         self.cur = out
         n, c, h, w = self.cur_shape
-        self.cur_shape = (n, c, (h - k) // stride + 1, (w - k) // stride + 1)
+        self.cur_shape = (n, c, (h + 2 * pad - k) // stride + 1,
+                          (w + 2 * pad - k) // stride + 1)
         return self
 
     def global_avgpool(self) -> "GraphBuilder":
@@ -261,11 +263,14 @@ def resnet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
     return b.build()
 
 
-def resnet18(batch: int = 1, num_classes: int = 1000, seed: int = 0) -> Graph:
+def resnet18(batch: int = 1, num_classes: int = 1000, seed: int = 0,
+             in_hw: int = 224) -> Graph:
     """ResNet-18 [He et al.]: 7x7/2 stem + padded 3x3/2 max-pool, four
     basic-block groups (64/128/256/512, two blocks each, strided
-    projection at each group boundary), GAP head."""
-    b = GraphBuilder("resnet18", (batch, 3, 224, 224), seed)
+    projection at each group boundary), GAP head.  ``in_hw`` shrinks
+    the input for interpret-mode tests (the GAP head absorbs any size
+    the five stride-2 stages leave >= 1)."""
+    b = GraphBuilder("resnet18", (batch, 3, in_hw, in_hw), seed)
     b.conv(64, 7, stride=2, pad=3).maxpool(3, 2, pad=1)
     for c_out, stride in ((64, 1), (64, 1), (128, 2), (128, 1),
                           (256, 2), (256, 1), (512, 2), (512, 1)):
@@ -331,10 +336,20 @@ def run_float(graph: Graph, x: jnp.ndarray, return_env: bool = False):
             else:
                 k = n.attr("kernel_shape")
                 s = n.attr("strides", k)
+                p = n.attr("pads", [0, 0, 0, 0])
+                padding = ((0, 0), (0, 0), (p[0], p[2]), (p[1], p[3]))
+                dims, strides = (1, 1, k[0], k[1]), (1, 1, s[0], s[1])
                 summed = jax.lax.reduce_window(
-                    xin, 0.0, jax.lax.add, (1, 1, k[0], k[1]),
-                    (1, 1, s[0], s[1]), "VALID")
-                env[n.outputs[0]] = summed / (k[0] * k[1])
+                    xin, 0.0, jax.lax.add, dims, strides, padding)
+                if any(p):
+                    # ONNX count_include_pad=0: divide by the real
+                    # window population, matching the int8 path
+                    counts = jax.lax.reduce_window(
+                        jnp.ones_like(xin), 0.0, jax.lax.add,
+                        dims, strides, padding)
+                    env[n.outputs[0]] = summed / counts
+                else:
+                    env[n.outputs[0]] = summed / (k[0] * k[1])
         elif n.op_type == "Relu":
             env[n.outputs[0]] = jax.nn.relu(env[n.inputs[0]])
         elif n.op_type == "Softmax":

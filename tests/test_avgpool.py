@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import parser
 from repro.core.synthesis import CNN2Gate
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.models import cnn
 
 RNG = np.random.default_rng(11)
@@ -36,6 +36,57 @@ def test_avgpool_ref_matches_float_rounding(h, c, k, s):
     win = win[:, ::s, ::s]
     want = np.floor((win.sum((-1, -2)) + k * k // 2) / (k * k))
     np.testing.assert_array_equal(got, np.clip(want, -128, 127))
+
+
+def test_padded_avgpool_excludes_pad_pixels():
+    """ONNX default (count_include_pad=0): a padded window averages
+    only its real taps.  Regression for the old divide-by-k*k behaviour
+    that dragged border means toward zero — pinned against an explicit
+    numpy window loop."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (2, 5, 7, 3), np.int8)
+    k, s, p = 3, 2, 1
+    got = np.asarray(ops.avgpool2d_nhwc(jnp.asarray(x), k, s, (p, p, p, p)))
+    xp = np.pad(x.astype(np.int64), ((0, 0), (p, p), (p, p), (0, 0)))
+    oh = (x.shape[1] + 2 * p - k) // s + 1
+    ow = (x.shape[2] + 2 * p - k) // s + 1
+    want = np.zeros((2, oh, ow, 3), np.int64)
+    for i in range(oh):
+        for j in range(ow):
+            win = xp[:, i * s:i * s + k, j * s:j * s + k, :]
+            # real (non-pad) taps of this window in original coords
+            hi0, hi1 = max(0, i * s - p), min(x.shape[1], i * s - p + k)
+            wj0, wj1 = max(0, j * s - p), min(x.shape[2], j * s - p + k)
+            count = (hi1 - hi0) * (wj1 - wj0)
+            want[:, i, j, :] = np.floor(
+                (win.sum((1, 2)) + count // 2) / count)
+    np.testing.assert_array_equal(got, np.clip(want, -128, 127))
+    # corner window covers 4 of 9 taps: include-pad semantics would
+    # have divided by 9 — make sure at least one corner differs
+    inc = np.floor((xp[:, 0:k, 0:k, :].sum((1, 2)) + k * k // 2)
+                   / (k * k))
+    assert not np.array_equal(want[:, 0, 0, :], inc)
+
+
+def test_padded_avgpool_int8_network_matches_float():
+    """End-to-end: a network with a *padded* AveragePool stage — the
+    int8 exclude-pad divide must track the float oracle's exclude-pad
+    mean (both sides changed together; include-pad float would drift)."""
+    b = cnn.GraphBuilder("padavg", (4, 3, 14, 14), 6)
+    b.conv(8, 3, pad=1).avgpool(3, 2, pad=1)
+    b.conv(16, 3, pad=1).global_avgpool()
+    b.fc(5, relu=False, softmax=True)
+    g = b.build()
+    pm = parser.parse(g)
+    assert any(li.kind == "pool" and any(li.pads) for li in pm.layers)
+    gate = CNN2Gate.from_graph(g)
+    x = RNG.standard_normal((4, 3, 14, 14)).astype(np.float32) * 0.5
+    gate.calibrate_quantization(x)
+    y_q = np.asarray(gate.build("emulation")(jnp.asarray(x)))
+    y_f = np.asarray(cnn.run_float(g, jnp.asarray(x)))
+    assert y_q.shape == y_f.shape
+    rel = np.linalg.norm(y_q - y_f) / max(np.linalg.norm(y_f), 1e-9)
+    assert rel < 0.75
 
 
 def test_int8_gap_network_matches_float_top1():

@@ -38,7 +38,10 @@ def i8(*shape):
 
 # ---------------------------------------------------------- parser / DAG
 def test_parse_resnet_tiny_stage_program():
-    pm = P.parse(cnn.resnet_tiny())
+    # fuse_skip=False: this test pins the *unfused* stage program — the
+    # fallback for ineligible merges (the skip-fusion pass has its own
+    # suite in tests/test_skip_fusion.py)
+    pm = P.parse(cnn.resnet_tiny(), fuse_skip=False)
     kinds = [li.kind for li in pm.layers]
     assert kinds.count(P.ADD) == 2
     adds = [li for li in pm.layers if li.kind == P.ADD]
@@ -68,13 +71,14 @@ def test_parse_mobilenet_depthwise_stages():
 
 
 def test_merge_stages_in_memory_schedule_and_latency():
-    pm = P.parse(cnn.resnet_tiny())
+    pm = P.parse(cnn.resnet_tiny(), fuse_skip=False)
     sched = P.memory_schedule(pm, 16, 32)
     assert len(sched) == len(pm.layers)
     assert all(s["read_vectors"] > 0 and s["lanes"] > 0 for s in sched)
     merge_rows = [s for s in sched if s["kind"] == P.ADD]
     assert merge_rows and all(s["weight_vectors"] == 0 for s in merge_rows)
-    rep = CNN2Gate.from_graph(cnn.resnet_tiny()).latency_report(
+    rep = CNN2Gate.from_graph(cnn.resnet_tiny(),
+                              fuse_skip=False).latency_report(
         "ARRIA10", 16, 32)
     add_times = [l for l in rep.layers if l.kind == P.ADD]
     assert add_times and all(l.macs == 0 and l.time_s > 0 for l in add_times)
@@ -123,7 +127,7 @@ def test_residual_add_mismatched_branch_scales_bit_exact():
     from the ref.py oracles: the merge must align operands with
     per-operand round-half-up shifts, bit-for-bit."""
     g = _diamond_graph()
-    pm = P.parse(g)
+    pm = P.parse(g, fuse_skip=False)
     conv_names = [li.name for li in pm.layers if li.kind == P.CONV]
     add_name = next(li.name for li in pm.layers if li.kind == P.ADD)
     fc_name = next(li.name for li in pm.layers if li.kind == P.FC)
@@ -135,7 +139,7 @@ def test_residual_add_mismatched_branch_scales_bit_exact():
         add_name: QuantSpec(m_w=0, m_x=4, m_y=3),
         fc_name: QuantSpec(m_w=7, m_x=3, m_y=7),
     }
-    gate = CNN2Gate.from_graph(g)
+    gate = CNN2Gate.from_graph(g, fuse_skip=False)
     gate.apply_quantization(specs)
     qm = gate.quantized
     add_q = next(ql for ql in qm.layers if ql.info.kind == P.ADD)
@@ -171,9 +175,10 @@ def test_residual_add_mismatched_branch_scales_bit_exact():
 
 def test_merge_below_common_scale_rejected():
     """Shift-only alignment cannot scale an operand *up*: a user spec
-    that puts the merge position above an operand must raise."""
+    that puts the merge position above an operand must raise (fused and
+    unfused programs alike)."""
     g = _diamond_graph()
-    pm = P.parse(g)
+    pm = P.parse(g, fuse_skip=False)
     conv_names = [li.name for li in pm.layers if li.kind == P.CONV]
     add_name = next(li.name for li in pm.layers if li.kind == P.ADD)
     fc_name = next(li.name for li in pm.layers if li.kind == P.FC)
