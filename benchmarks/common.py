@@ -1,10 +1,40 @@
 """Shared helpers for the benchmark harness."""
+import json
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
 ROWS: List[Tuple[str, float, str]] = []
+
+#: repo root — the machine-readable BENCH_*.json trajectory files live
+#: here (top level, next to CHANGES.md) so the perf history is greppable
+#: across PRs without digging through results/.
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_env() -> Dict[str, object]:
+    """Environment metadata stamped into every BENCH_*.json: perf
+    numbers are meaningless across PRs without the jax version and the
+    device they ran on."""
+    import jax
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": [str(d) for d in jax.devices()],
+        "device_count": len(jax.devices()),
+    }
+
+
+def write_bench_json(name: str, results: Dict[str, object]) -> str:
+    """Write the top-level ``BENCH_<name>.json`` trajectory file
+    (results + environment metadata).  Returns the path."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "env": bench_env(),
+                   "results": results}, f, indent=1)
+    return path
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -21,7 +21,7 @@ from repro.core import pipeline as pipe
 from repro.core.synthesis import CNN2Gate
 from repro.kernels import ops
 from repro.models import cnn
-from .common import emit, timeit
+from .common import emit, timeit, write_bench_json
 
 RNG = np.random.default_rng(0)
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -99,3 +99,4 @@ def run() -> None:
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
     with open(RESULTS, "w") as f:
         json.dump(results, f, indent=1)
+    write_bench_json("pipeline", results)

@@ -91,6 +91,11 @@ def thread_scales(model: P.ParsedModel,
     two rules the unfused Conv + Add pair would apply.  Iterated to
     fixpoint; raises if the graph input or output never resolves
     (under-specified specs).
+
+    Per-channel specs change nothing here: tensor positions are
+    *activation* scales, which stay per-tensor in every mode (a vector
+    ``m_w`` only widens the weighted stage's own requant shift), so
+    merge-alignment groups keep aligning on scalar positions.
     """
     tensor_m: Dict[str, int] = {}
     for _ in range(len(model.layers) + 2):
@@ -170,13 +175,41 @@ def _check_group(li: P.LayerInfo) -> None:
 
 
 def build_quantized(model: P.ParsedModel,
-                    specs: Dict[str, QuantSpec]) -> QuantizedModel:
+                    specs: Dict[str, QuantSpec],
+                    per_channel: Optional[bool] = None) -> QuantizedModel:
     """Apply the user-given (N, m) pairs (the paper: CNN2Gate does not
     *perform* quantization, it *applies* provided values) and stage all
     weights into the kernel-native layouts.  Merge stages (add/concat)
     get per-operand alignment shifts derived from :func:`thread_scales`;
     a spec for them is optional (default: merge at the minimum operand
-    position, no output requant)."""
+    position, no output requant).
+
+    ``per_channel`` selects the weight-scale mode:
+      * ``None`` (default) — honour each spec as given: specs with a
+        tuple ``m_w`` run the per-lane shift-vector epilogue, scalar
+        specs run the unchanged per-tensor path;
+      * ``True``  — every weighted layer must run per-channel: scalar
+        ``m_w`` specs are widened to uniform per-Cout vectors (bit-
+        identical numerics, shift-vector datapath);
+      * ``False`` — strict per-tensor: a tuple ``m_w`` raises.
+    Activations are per-tensor in every mode, so merge alignment and
+    fused-skip epilogues are untouched beyond the conv requant."""
+    if per_channel is not None:
+        coerced = {}
+        for name, spec in specs.items():
+            li = next((l for l in model.layers if l.name == name
+                       or (l.merge is not None and l.merge.name == name)),
+                      None)
+            weighted = (li is not None and li.name == name
+                        and li.kind in (P.CONV, P.FC))
+            if not per_channel and spec.per_channel:
+                raise ValueError(
+                    f"spec for {name!r} is per-channel but "
+                    "per_channel=False was requested")
+            if per_channel and weighted and not spec.per_channel:
+                coerced[name] = dataclasses.replace(
+                    spec, m_w=(spec.m_w,) * li.c_out)
+        specs = dict(specs, **coerced)
     tensor_m = thread_scales(model, specs)
     layers: List[QuantizedLayer] = []
     for li in model.layers:

@@ -117,7 +117,8 @@ VMEM_BUDGET_BYTES = 16 * 1024 ** 2
 
 def conv_band_working_set(layers, n_l: int,
                           block_h: Optional[int],
-                          n_i: Optional[int] = None) -> int:
+                          n_i: Optional[int] = None,
+                          per_channel: bool = False) -> int:
     """Peak per-grid-step VMEM bytes of the row-tiled kernels across the
     model's stage program (the quantity the DSE must keep under the
     on-chip budget — the paper's line-buffer/block-RAM sizing, §3.2.2).
@@ -139,6 +140,12 @@ def conv_band_working_set(layers, n_l: int,
       * residual/concat merges — every operand band plus the int32
         alignment intermediate and the output band (the skip buffer the
         paper would hold in block RAM while the main branch computes).
+
+    ``per_channel`` charges the per-lane requant-shift row (one int32
+    per Cout lane of the tile, next to the bias row) every per-channel
+    quantized grid step holds — the shift-vector bytes of DESIGN.md §8,
+    so the DSE stays honest about the per-channel epilogue's working
+    set.
     """
     from repro.kernels import qconv  # kernels never import core: no cycle
 
@@ -172,16 +179,18 @@ def conv_band_working_set(layers, n_l: int,
             bc = min(block_cout, -(-cout // 128) * 128)
             ws = qconv.dw_vmem_bytes(wp, cout, kh, kw, bc, oh, ow,
                                      sh=sh, sw=sw, block_h=block_h,
-                                     pool=pool)
+                                     pool=pool, per_channel=per_channel)
         elif li.group > 1:  # ragged grouped conv: unbanded reference path
             ws = (hp * wp * cin + li.weight_count()
-                  + 4 * oh * ow * cout + oh * ow * cout)
+                  + 4 * oh * ow * cout + oh * ow * cout
+                  + qconv.shift_vec_bytes(cout, per_channel))
         else:
             bco = min(block_cout, -(-cout // 128) * 128)
             ws = qconv.vmem_bytes(
                 hp, wp, cin, kh, kw, bco, oh, ow,
                 sh=sh, sw=sw, block_h=block_h, pool=pool,
-                block_cin=block_cin, skip=li.merge is not None)
+                block_cin=block_cin, skip=li.merge is not None,
+                per_channel=per_channel)
         peak = max(peak, ws)
     return peak
 
@@ -217,7 +226,8 @@ def tpu_report_from_compiled(compiled, profile: TPUProfile = TPU_V5E,
     quota means 'does not fit'.
     """
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from repro.roofline import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     resident = (ma.argument_size_in_bytes + ma.output_size_in_bytes

@@ -48,13 +48,22 @@ class CNNDesignSpace(DesignSpace):
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,
                  ni_cap: int = NI_CAP, nl_cap: int = NL_CAP,
-                 block_h_options: Optional[List[int]] = None):
+                 block_h_options: Optional[List[int]] = None,
+                 per_channel: bool = False):
         self.model = model
         self.board = board
         self._ni = [n for n in model.feasible_ni(ni_cap) if n <= ni_cap]
         self._nl = [n for n in model.feasible_nl(nl_cap) if n <= nl_cap]
         self._bh = sorted(block_h_options) if block_h_options else None
+        #: per-channel quantized program: the working-set rule charges
+        #: the per-lane shift row (int32/lane) alongside the bias, and
+        #: the weight store grows by one int32 exponent per Cout lane
+        self.per_channel = per_channel
         self.weight_bytes = model.total_weights  # int8: 1 byte/weight
+        if per_channel:
+            self.weight_bytes += 4 * sum(
+                li.c_out for li in model.layers
+                if li.kind in ("conv", "fc"))
 
     def options(self) -> List[Tuple]:
         if self._bh is None:
@@ -82,7 +91,8 @@ class CNNDesignSpace(DesignSpace):
         # the Cin tile (8*N_i) and the Cout tile (8*N_l) both bound the
         # band the same way the executor's kernel tiles do
         band_bytes = conv_band_working_set(self.model.layers, nl, option[2],
-                                           n_i=ni)
+                                           n_i=ni,
+                                           per_channel=self.per_channel)
         band_pct = 100.0 * (8 * band_bytes) / self.board.mem_bits
         percents = dict(rep.percents)
         percents["mem"] = max(percents["mem"], band_pct)

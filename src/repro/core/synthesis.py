@@ -34,7 +34,8 @@ from . import dse as dse_mod
 from . import parser as P
 from . import pipeline as pipe
 from .graph import Graph
-from .quantize import QuantSpec, best_pow2_exponent
+from .quantize import (MAX_SHIFT, QuantSpec, best_pow2_exponent,
+                       best_pow2_exponents_per_channel)
 from .resources import (FPGA_BOARDS, FPGAProfile, fpga_layer_time_s)
 from .spaces import CNNDesignSpace
 
@@ -87,12 +88,18 @@ class CNN2Gate:
         return cls.from_graph(onnx_lite.load(path))
 
     # ------------------------------------------------------- quantization
-    def apply_quantization(self, specs: Dict[str, QuantSpec]) -> None:
-        """Apply *given* per-layer (N, m) pairs (§4.2 Physical domain)."""
+    def apply_quantization(self, specs: Dict[str, QuantSpec],
+                           per_channel: Optional[bool] = None) -> None:
+        """Apply *given* per-layer (N, m) pairs (§4.2 Physical domain).
+        ``per_channel`` is forwarded to :func:`pipeline.build_quantized`
+        (None: honour the specs as given)."""
         self.specs = specs
-        self.quantized = pipe.build_quantized(self.parsed, specs)
+        self.quantized = pipe.build_quantized(self.parsed, specs,
+                                              per_channel=per_channel)
 
-    def calibrate_quantization(self, sample_input: np.ndarray) -> Dict[str, QuantSpec]:
+    def calibrate_quantization(self, sample_input: np.ndarray,
+                               per_channel: bool = False
+                               ) -> Dict[str, QuantSpec]:
         """Convenience PTQ (stand-in for the user's external tool) — a
         graph pass over the DAG stage program, not a linear scan.
 
@@ -115,6 +122,16 @@ class CNN2Gate:
         position, the executor's per-operand alignment shifts absorb
         the residual mismatch — alignment is an optimisation (it makes
         those shifts zero), not a correctness requirement.
+
+        ``per_channel=True`` computes **per-output-channel** weight
+        exponents (``m_w`` becomes a length-Cout tuple, the max-abs
+        rule applied per Cout slice — DESIGN.md §8): each lane
+        quantizes at its own power of two and the band epilogues apply
+        a per-lane shift vector.  Activations (``m_x``/``m_y``) stay
+        per-tensor, so every merge/alignment rule below is unchanged;
+        the ``m_y <= m_w + m_x`` non-negative-shift cap simply uses
+        the *minimum* lane exponent (every lane's shift must stay
+        representable).  Per-tensor calibration is the default.
         """
         pm = self.parsed
         acts = collect_activations(pm.graph, sample_input)
@@ -157,14 +174,31 @@ class CNN2Gate:
         specs: Dict[str, QuantSpec] = {}
         for li in pm.layers:
             if li.kind in (P.CONV, P.FC):
-                m_w = best_pow2_exponent(weights[li.weight])
+                if per_channel:
+                    m_w = best_pow2_exponents_per_channel(weights[li.weight])
+                    m_w_cap = min(m_w)  # every lane's shift must be >= 0
+                else:
+                    m_w = m_w_cap = best_pow2_exponent(weights[li.weight])
                 m_x = tensor_m[li.inputs[0]]
+
+                def lane_clamp(m_w, m_y):
+                    # keep every lane's shift m_w[c]+m_x-m_y inside the
+                    # int32 round-half-up datapath; lanes at the clamp
+                    # lose nothing (their shifted-away bits are already
+                    # below one output LSB)
+                    if not per_channel:
+                        return m_w
+                    return tuple(min(mw, MAX_SHIFT + m_y - m_x)
+                                 for mw in m_w)
+
                 if li.merge is not None:
                     # the conv's own spec scales its intermediate tensor;
                     # the folded merge gets the same spec a standalone
                     # Add stage would have received
-                    m_int = min(desired[li.merge_intermediate], m_w + m_x)
-                    specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_int)
+                    m_int = min(desired[li.merge_intermediate],
+                                m_w_cap + m_x)
+                    specs[li.name] = QuantSpec(
+                        m_w=lane_clamp(m_w, m_int), m_x=m_x, m_y=m_int)
                     m_common = min(m_int, tensor_m[li.skip_input])
                     # scale from the *merge* output stats (an absorbed
                     # max-pool passes scale through, as when standalone)
@@ -172,8 +206,9 @@ class CNN2Gate:
                     specs[li.merge.name] = QuantSpec(
                         m_w=0, m_x=m_common, m_y=m_y)
                 else:
-                    m_y = min(desired[li.output], m_w + m_x)
-                    specs[li.name] = QuantSpec(m_w=m_w, m_x=m_x, m_y=m_y)
+                    m_y = min(desired[li.output], m_w_cap + m_x)
+                    specs[li.name] = QuantSpec(
+                        m_w=lane_clamp(m_w, m_y), m_x=m_x, m_y=m_y)
                 tensor_m[li.output] = m_y
             elif li.kind == P.POOL:
                 tensor_m[li.output] = tensor_m[li.inputs[0]]
@@ -189,11 +224,25 @@ class CNN2Gate:
         return specs
 
     # ---------------------------------------------------------------- DSE
+    @property
+    def per_channel(self) -> bool:
+        """True when the *built* program runs any per-channel weight
+        spec — the DSE then charges the shift-vector bytes.  Reads the
+        quantized layers, not the raw specs: apply_quantization(...,
+        per_channel=True) widens scalar specs inside build_quantized,
+        so the specs dict alone under-reports the datapath."""
+        if self.quantized is not None:
+            return any(ql.spec is not None and ql.spec.per_channel
+                       for ql in self.quantized.layers)
+        return bool(self.specs) and any(
+            s.per_channel for s in self.specs.values())
+
     def design_space(self, board: str,
                      block_h_options: Optional[List[int]] = None
                      ) -> CNNDesignSpace:
         return CNNDesignSpace(self.parsed, FPGA_BOARDS[board],
-                              block_h_options=block_h_options)
+                              block_h_options=block_h_options,
+                              per_channel=self.per_channel)
 
     def explore(self, board: str, algo: str = "rl",
                 thresholds: Optional[Dict[str, float]] = None,

@@ -71,9 +71,10 @@ def compressed_psum(x: jnp.ndarray, axis: str, mesh) -> jnp.ndarray:
         del qsum  # int payload proves the wire format; value from vsum
         return vsum / n
 
+    from repro.launch.mesh import shard_map as compat_shard_map
     spec = jax.sharding.PartitionSpec()
-    return jax.shard_map(local, mesh=mesh, in_specs=spec,
-                         out_specs=spec, check_vma=False)(x)
+    return compat_shard_map(local, mesh=mesh, in_specs=spec,
+                            out_specs=spec)(x)
 
 
 # ------------------------------------------------- straggler monitoring
@@ -134,7 +135,8 @@ class StragglerMonitor:
 
 def make_accumulating_step(loss_fn: Callable, n_micro: int,
                            unroll: bool = False,
-                           grad_spec=None) -> Callable:
+                           grad_spec=None,
+                           act_constraint=None) -> Callable:
     """Split the batch into ``n_micro`` microbatches and accumulate
     grads with a scan.  Under GSPMD the per-microbatch gradient
     reductions overlap the next microbatch's compute (the classic
@@ -165,6 +167,13 @@ def make_accumulating_step(loss_fn: Callable, n_micro: int,
 
         def body(carry, mb):
             acc_loss, acc_grads = carry
+            if act_constraint is not None:
+                # re-pin the microbatch's batch axis inside the scan
+                # body: sharding propagation through the reshape + scan
+                # is version-dependent, and an unpinned microbatch can
+                # force the partitioner into involuntary full
+                # rematerialisation (replicated global tensors)
+                mb = jax.tree.map(act_constraint, mb)
             loss, grads = jax.value_and_grad(loss_fn)(params, mb)
             acc_grads = constrain(
                 jax.tree.map(jnp.add, acc_grads, constrain(grads)))

@@ -34,9 +34,11 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def qgemm(x, w, b=None, *, shift: int, relu: bool = False,
+def qgemm(x, w, b=None, *, shift, relu: bool = False,
           block_m: int = 128, block_n: int = 128, block_k: int = 128,
           interpret: Optional[bool] = None):
+    """``shift`` is an int (per-tensor) or a length-N tuple (per-output-
+    channel weight scales — the per-lane shift vector path)."""
     interpret = default_interpret() if interpret is None else interpret
     return _qgemm.qgemm(x, w, b, shift=shift, relu=relu, block_m=block_m,
                         block_n=block_n, block_k=block_k, interpret=interpret)
@@ -51,7 +53,7 @@ def qconv2d_nhwc(
     *,
     strides: Tuple[int, int] = (1, 1),
     pads: Tuple[int, int, int, int] = (0, 0, 0, 0),
-    shift: int = 0,
+    shift=0,
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     groups: int = 1,
@@ -74,6 +76,9 @@ def qconv2d_nhwc(
       * anything else (ragged groups) — the exact jnp reference path
         (:func:`ref.qconv2d_ref`), bit-identical semantics, no banding.
 
+    ``shift`` is an int (per-tensor requant) or a length-Cout tuple
+    (per-output-channel weight scales: the band epilogue applies a
+    per-lane shift vector — every dispatch target supports it).
     ``block_cin`` tiles the dense kernel's Cin contraction (the DSE's
     ``N_i`` axis); ``skip`` fuses a residual add into the epilogue
     (dense kernel only — the parser never folds merges onto depthwise

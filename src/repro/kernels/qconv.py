@@ -57,22 +57,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import ref
+
 INT8_MIN, INT8_MAX = -128, 127
 
-
-def _round_shift(v, shift: int):
-    """Round-half-up arithmetic right shift (the paper's requant and
-    the merge alignment step share this primitive)."""
-    if shift > 0:
-        v = jax.lax.shift_right_arithmetic(v + (1 << (shift - 1)), shift)
-    return v
+#: Round-half-up arithmetic right shift (the paper's requant and the
+#: merge alignment step share this primitive).  ``shift`` is a static
+#: Python int (per-tensor requant) or an int32 row vector — ``(1,
+#: bco)``, one count per output-channel lane — for per-channel weight
+#: scales.  ONE implementation for oracle and kernels (ref.py imports
+#: only jax/jnp, so no cycle): a rounding-rule change cannot drift
+#: between them.
+_round_shift = ref.round_shift
 
 
 def _band_epilogue(
     acc,      # (conv_rows * wo, bco) int32 accumulator
     b_row,    # (1, bco) int32 bias
     conv_hw: Tuple[int, int],
-    shift: int,
+    shift,                           # int | (1, bco) int32 per-lane row
     relu: bool,
     pool: Optional[Tuple[int, int]],
     skip=None,                       # (conv_rows * wo, bco) int8 or None
@@ -82,6 +85,11 @@ def _band_epilogue(
 ):
     """Shared bias/requant/ReLU/max-pool tail of both band kernels —
     identical fixed-point semantics for dense and depthwise convs.
+    With a per-channel quantized layer ``shift`` is a ``(1, bco)``
+    int32 row (one count per Cout lane, staged as a kernel operand
+    alongside the bias) instead of a static scalar; the merge
+    alignment/requant shifts below stay scalar either way (activations
+    are always per-tensor).
 
     With ``skip`` the tail replicates the unfused Conv→Add two-stage
     program exactly: the conv accumulator is requantized and clipped to
@@ -128,10 +136,12 @@ def _qconv_band_kernel(
     x_ref,    # (1, band_in_rows, Wp, bci) int8 — halo band, Cin slice
     w_ref,    # (KH, KW, bci, bco) int8
     b_ref,    # (1, bco) int32
-    *rest,    # [skip_ref (1, conv_rows, Wo, bco) int8,] o_ref, acc_ref
+    *rest,    # [shift_ref (1, bco) int32,]
+              # [skip_ref (1, conv_rows, Wo, bco) int8,] o_ref, acc_ref
     strides: Tuple[int, int],
     conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
     cin_steps: int,
+    has_shift_vec: bool,
     has_skip: bool,
     shift: int,
     relu: bool,
@@ -140,10 +150,10 @@ def _qconv_band_kernel(
     merge_shift: int,
     merge_relu: bool,
 ):
-    if has_skip:
-        skip_ref, o_ref, acc_ref = rest
-    else:
-        skip_ref, (o_ref, acc_ref) = None, rest
+    rest = list(rest)
+    shift_ref = rest.pop(0) if has_shift_vec else None
+    skip_ref = rest.pop(0) if has_skip else None
+    o_ref, acc_ref = rest
     x = x_ref[0]                      # (band_in_rows, Wp, bci)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
     bci = x.shape[-1]
@@ -170,8 +180,9 @@ def _qconv_band_kernel(
     def _finish():
         skip = (skip_ref[0].reshape(ho * wo, -1)
                 if skip_ref is not None else None)
+        s = shift_ref[...] if shift_ref is not None else shift
         o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
-                                  shift, relu, pool, skip=skip,
+                                  s, relu, pool, skip=skip,
                                   skip_shifts=skip_shifts,
                                   merge_shift=merge_shift,
                                   merge_relu=merge_relu)
@@ -192,11 +203,10 @@ def _qdwconv_band_kernel(
     x_ref,    # (1, band_in_rows, Wp, bc) int8 — halo band, channel tile
     w_ref,    # (KH, KW, bc) int8 — one filter tap per channel
     b_ref,    # (1, bc) int32
-    o_ref,    # (1, block_h, Wo', bc) int8 (post-pool if fused)
-    acc_ref,  # VMEM scratch: (conv_rows * wo, bc) int32
-    *,
+    *rest,    # [shift_ref (1, bc) int32,] o_ref, acc_ref
     strides: Tuple[int, int],
     conv_hw: Tuple[int, int],
+    has_shift_vec: bool,
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
@@ -205,7 +215,13 @@ def _qdwconv_band_kernel(
     its own group, so the "per-group Cout tile" degenerates to a channel
     tile and the kh*kw contraction becomes VPU multiply-accumulates
     (channels ride the 128-wide lane axis; there is no cross-channel
-    reduction to feed the MXU)."""
+    reduction to feed the MXU).  Per-channel requant rides a
+    ``(1, bc)`` int32 shift row exactly as in the dense kernel — the
+    channel tile IS the lane dim, so depthwise layers (the biggest
+    per-channel accuracy winners) pay one row per tile."""
+    rest = list(rest)
+    shift_ref = rest.pop(0) if has_shift_vec else None
+    o_ref, acc_ref = rest
     x = x_ref[0]                      # (band_in_rows, Wp, bc)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
     bc = o_ref.shape[-1]
@@ -224,8 +240,9 @@ def _qdwconv_band_kernel(
             acc_ref[...] += (patch.reshape(ho * wo, bc).astype(jnp.int32)
                              * w_ref[i, j].astype(jnp.int32))
 
+    s = shift_ref[...] if shift_ref is not None else shift
     o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
-                              shift, relu, pool)
+                              s, relu, pool)
 
 
 def band_geometry(block_h: int, kh: int, sh: int,
@@ -275,7 +292,7 @@ def qconv2d(
     b: Optional[jnp.ndarray],  # (Cout,) int32
     *,
     strides: Tuple[int, int] = (1, 1),
-    shift: int = 0,
+    shift=0,         # int | length-Cout tuple (per-channel shift vector)
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     block_cout: int = 128,
@@ -291,7 +308,14 @@ def qconv2d(
     whole Cin per grid step (the pre-tiling behaviour); otherwise the
     contraction runs in ``block_cin``-channel slices on an extra
     (innermost) grid axis.  ``skip`` is an optional residual operand in
-    the *conv output* geometry (pre-pool); see ``_band_epilogue``."""
+    the *conv output* geometry (pre-pool); see ``_band_epilogue``.
+
+    ``shift`` as a length-Cout tuple selects the per-channel requant
+    path: the counts are staged as a ``(1, Cout)`` int32 operand with a
+    per-Cout-block BlockSpec (the bias row's twin) and the epilogue
+    applies a per-lane round-half-up shift vector.  A scalar ``shift``
+    compiles the exact pre-existing per-tensor kernel (no extra
+    operand, same jaxpr)."""
     n, hp, wp, cin = x.shape
     kh, kw, cin2, cout = w.shape
     assert cin == cin2, (x.shape, w.shape)
@@ -300,6 +324,10 @@ def qconv2d(
     wo = (wp - kw) // sw + 1
     if b is None:
         b = jnp.zeros((cout,), jnp.int32)
+
+    per_channel = isinstance(shift, tuple)
+    if per_channel:
+        assert len(shift) == cout, (len(shift), cout)
 
     bco = min(block_cout, _rup(cout, 128))
     coutp = _rup(cout, bco)
@@ -341,6 +369,14 @@ def qconv2d(
         pl.BlockSpec((1, bco), lambda ni, hi, co, ci: (0, co)),
     ]
     operands = [x, wpad, bpad]
+    if per_channel:
+        # per-lane shift counts ride next to the bias row (same
+        # per-Cout-block spec; padded lanes shift by 0 and are sliced)
+        svec = jnp.pad(jnp.asarray(shift, jnp.int32),
+                       (0, coutp - cout)).reshape(1, coutp)
+        in_specs.append(
+            pl.BlockSpec((1, bco), lambda ni, hi, co, ci: (0, co)))
+        operands.append(svec)
     if skip is not None:
         assert skip.shape == (n, ho, wo, cout), (skip.shape, (n, ho, wo, cout))
         # Conv-row band of the residual operand.  Bands of conv rows
@@ -364,8 +400,9 @@ def qconv2d(
             strides=strides,
             conv_hw=(conv_rows, wo),
             cin_steps=cin_steps,
+            has_shift_vec=per_channel,
             has_skip=skip is not None,
-            shift=shift,
+            shift=0 if per_channel else shift,
             relu=relu,
             pool=pool,
             skip_shifts=skip_shifts,
@@ -397,7 +434,7 @@ def qdwconv2d(
     b: Optional[jnp.ndarray],  # (C,) int32
     *,
     strides: Tuple[int, int] = (1, 1),
-    shift: int = 0,
+    shift=0,         # int | length-C tuple (per-channel shift vector)
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     block_c: int = 128,
@@ -407,7 +444,9 @@ def qdwconv2d(
     """Depthwise (group == C, multiplier 1) row-banded int8 conv with the
     same fused ReLU/requant/max-pool tail as :func:`qconv2d`.  Grid is
     ``(batch, H/block_h, C/block_c)`` — the channel tile is the
-    per-group Cout tile with one channel per group."""
+    per-group Cout tile with one channel per group.  ``shift`` as a
+    length-C tuple stages the per-channel shift row, as in
+    :func:`qconv2d`."""
     n, hp, wp, c = x.shape
     kh, kw, c2 = w.shape
     assert c == c2, (x.shape, w.shape)
@@ -416,6 +455,10 @@ def qdwconv2d(
     wo = (wp - kw) // sw + 1
     if b is None:
         b = jnp.zeros((c,), jnp.int32)
+
+    per_channel = isinstance(shift, tuple)
+    if per_channel:
+        assert len(shift) == c, (len(shift), c)
 
     bc = min(block_c, _rup(c, 128))
     cp = _rup(c, bc)
@@ -438,25 +481,34 @@ def qdwconv2d(
     if rows_needed > hp:
         x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
 
+    in_specs = [
+        # Halo band, channel-tiled: unblocked element offsets (rows
+        # overlap between bands; channels advance by whole tiles).
+        pl.BlockSpec((1, band_in_rows, wp, bc),
+                     lambda ni, hi, ci: (ni, hi * in_step, 0, ci * bc),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((kh, kw, bc), lambda ni, hi, ci: (0, 0, ci)),
+        pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)),
+    ]
+    operands = [x, wpad, bpad]
+    if per_channel:
+        svec = jnp.pad(jnp.asarray(shift, jnp.int32),
+                       (0, cp - c)).reshape(1, cp)
+        in_specs.append(pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)))
+        operands.append(svec)
+
     out = pl.pallas_call(
         functools.partial(
             _qdwconv_band_kernel,
             strides=strides,
             conv_hw=(conv_rows, wo),
-            shift=shift,
+            has_shift_vec=per_channel,
+            shift=0 if per_channel else shift,
             relu=relu,
             pool=pool,
         ),
         grid=(n, n_bands, cp // bc),
-        in_specs=[
-            # Halo band, channel-tiled: unblocked element offsets (rows
-            # overlap between bands; channels advance by whole tiles).
-            pl.BlockSpec((1, band_in_rows, wp, bc),
-                         lambda ni, hi, ci: (ni, hi * in_step, 0, ci * bc),
-                         indexing_mode=pl.unblocked),
-            pl.BlockSpec((kh, kw, bc), lambda ni, hi, ci: (0, 0, ci)),
-            pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, ow, bc),
                                lambda ni, hi, ci: (ni, hi, 0, ci)),
         out_shape=jax.ShapeDtypeStruct((n, ohp, ow, cp), jnp.int8),
@@ -464,7 +516,7 @@ def qdwconv2d(
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, wpad, bpad)
+    )(*operands)
     return out[:, :oh, :, :c]
 
 
@@ -489,15 +541,17 @@ def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
                block_h: Optional[int] = None,
                pool: Optional[Tuple[int, int]] = None,
                block_cin: Optional[int] = None,
-               skip: bool = False) -> int:
+               skip: bool = False,
+               per_channel: bool = False) -> int:
     """Per-grid-step working-set estimate used by the DSE resource
     model: one halo row band (one Cin slice of it when ``block_cin`` is
     set) + weight tile + int32 accumulator scratch + output band, plus
     the residual skip band (``skip_vmem_bytes``) when a residual add is
-    fused into the epilogue.  ``ho``/``wo`` are *final* output
-    rows/cols (post-pool when ``pool`` is fused); ``block_h=None``
-    means untiled (the whole plane in one band — the old kernel's
-    working set)."""
+    fused into the epilogue and the int32 per-lane shift row
+    (``shift_vec_bytes``) when the layer is per-channel quantized.
+    ``ho``/``wo`` are *final* output rows/cols (post-pool when ``pool``
+    is fused); ``block_h=None`` means untiled (the whole plane in one
+    band — the old kernel's working set)."""
     bh = min(block_h or ho, ho)
     conv_rows, _band_in_rows, _step = band_geometry(bh, kh, sh, pool)
     bci = min(block_cin or cin, cin)
@@ -507,7 +561,8 @@ def vmem_bytes(hp: int, wp: int, cin: int, kh: int, kw: int, bco: int,
             + kh * kw * bci * bco            # w tile int8
             + 4 * conv_rows * conv_wo * bco  # acc scratch int32
             + bh * wo * bco                  # y band int8
-            + skip_vmem_bytes(conv_rows, conv_wo, bco, skip))
+            + skip_vmem_bytes(conv_rows, conv_wo, bco, skip)
+            + shift_vec_bytes(bco, per_channel))
 
 
 def skip_vmem_bytes(conv_rows: int, conv_wo: int, bco: int,
@@ -518,15 +573,25 @@ def skip_vmem_bytes(conv_rows: int, conv_wo: int, bco: int,
     return conv_rows * conv_wo * bco if skip else 0
 
 
+def shift_vec_bytes(lanes: int, per_channel: bool = True) -> int:
+    """int32 bytes of the per-lane requant-shift row a per-channel
+    quantized grid step holds next to the bias row (the epilogue's
+    shift-vector operand; zero in per-tensor mode, where the shift is
+    a compile-time constant)."""
+    return 4 * lanes if per_channel else 0
+
+
 def dw_vmem_bytes(wp: int, c: int, kh: int, kw: int, bc: int,
                   ho: int, wo: int, *,
                   sh: int = 1,
                   sw: Optional[int] = None,
                   block_h: Optional[int] = None,
-                  pool: Optional[Tuple[int, int]] = None) -> int:
+                  pool: Optional[Tuple[int, int]] = None,
+                  per_channel: bool = False) -> int:
     """Per-grid-step working set of the depthwise row-band kernel.  The
     input band is channel-tiled (unlike the dense kernel, which must see
-    every Cin for the contraction), so ``bc`` bounds every term."""
+    every Cin for the contraction), so ``bc`` bounds every term
+    (including the per-channel shift row in per-channel mode)."""
     bh = min(block_h or ho, ho)
     conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
     conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
@@ -534,7 +599,8 @@ def dw_vmem_bytes(wp: int, c: int, kh: int, kw: int, bc: int,
     return (band_in_rows * wp * bc           # x band int8 (channel tile)
             + kh * kw * bc                   # per-channel taps int8
             + 4 * conv_rows * conv_wo * bc   # acc scratch int32
-            + bh * wo * bc)                  # y band int8
+            + bh * wo * bc                   # y band int8
+            + shift_vec_bytes(bc, per_channel))
 
 
 def _rup(x: int, mult: int) -> int:

@@ -6,7 +6,11 @@ matrix-matrix multiplication unit").
 TPU mapping: int8 operands feed the MXU with int32 accumulation; block
 shapes default to (128, 128, 128) tiles — multiples of the (32, 128)
 int8 native tile — and the DSE's ``N_i``/``N_l`` map to the contraction
-and output tile widths.
+and output tile widths.  ``shift`` may be a length-N tuple (per-output-
+channel quantized FC layers): the counts are staged as a ``(1, N)``
+int32 operand sharing the bias row's BlockSpec and the epilogue
+applies a per-lane round-half-up shift vector; a scalar ``shift``
+compiles the exact per-tensor kernel.
 """
 from __future__ import annotations
 
@@ -18,11 +22,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import ref
+
 INT8_MIN, INT8_MAX = -128, 127
 
+#: Round-half-up shift (scalar or per-lane row) + relu + int8 clip —
+#: the oracle's own implementation (ref.py imports only jax/jnp, so no
+#: cycle): the kernel epilogue cannot drift from what tests pin.
+_requant = ref.requant
 
-def _qgemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
-                  shift: int, relu: bool):
+
+def _qgemm_kernel(x_ref, w_ref, b_ref, *rest, k_steps: int,
+                  has_shift_vec: bool, shift: int, relu: bool):
+    rest = list(rest)
+    s_ref = rest.pop(0) if has_shift_vec else None
+    o_ref, acc_ref = rest
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -34,11 +49,8 @@ def _qgemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _finish():
         acc = acc_ref[...] + b_ref[...].astype(jnp.int32)
-        if shift > 0:
-            acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
-        if relu:
-            acc = jnp.maximum(acc, 0)
-        o_ref[...] = jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+        s = s_ref[...] if s_ref is not None else shift
+        o_ref[...] = _requant(acc, s, relu)
 
 
 @functools.partial(
@@ -50,7 +62,7 @@ def qgemm(
     w: jnp.ndarray,  # (K, N) int8
     b: Optional[jnp.ndarray],  # (N,) int32 or None
     *,
-    shift: int,
+    shift,           # int | length-N tuple (per-channel shift vector)
     relu: bool = False,
     block_m: int = 128,
     block_n: int = 128,
@@ -64,20 +76,32 @@ def qgemm(
     assert k == k2, (x.shape, w.shape)
     if b is None:
         b = jnp.zeros((n,), jnp.int32)
+    per_channel = isinstance(shift, tuple)
+    if per_channel:
+        assert len(shift) == n, (len(shift), n)
     bm, bn, bk = min(block_m, _rup(m, 8)), min(block_n, _rup(n, 128)), min(block_k, _rup(k, 128))
     mp, np_, kp = _rup(m, bm), _rup(n, bn), _rup(k, bk)
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
     bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
     k_steps = kp // bk
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    operands = [xp, wp, bp]
+    if per_channel:
+        svec = jnp.pad(jnp.asarray(shift, jnp.int32),
+                       (0, np_ - n)).reshape(1, np_)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(svec)
     out = pl.pallas_call(
-        functools.partial(_qgemm_kernel, k_steps=k_steps, shift=shift, relu=relu),
+        functools.partial(_qgemm_kernel, k_steps=k_steps,
+                          has_shift_vec=per_channel,
+                          shift=0 if per_channel else shift, relu=relu),
         grid=(mp // bm, np_ // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
@@ -88,7 +112,7 @@ def qgemm(
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(xp, wp, bp)
+    )(*operands)
     return out[:m, :n]
 
 

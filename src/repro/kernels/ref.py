@@ -16,10 +16,32 @@ import jax.numpy as jnp
 INT8_MIN, INT8_MAX = -128, 127
 
 
-def requant(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
-    """int32 accumulator -> int8: round-half-up shift, relu, clip."""
-    if shift > 0:
-        acc = jax.lax.shift_right_arithmetic(acc + (1 << (shift - 1)), shift)
+def _is_scalar_shift(shift) -> bool:
+    return isinstance(shift, int) or (
+        hasattr(shift, "ndim") and getattr(shift, "ndim", 1) == 0)
+
+
+def round_shift(v: jnp.ndarray, shift) -> jnp.ndarray:
+    """Round-half-up arithmetic right shift (no clip/relu).  ``shift``
+    is a Python int (per-tensor) or an int32 vector broadcast against
+    the **last axis** of ``v`` (per-output-channel lanes) — the shared
+    requant primitive of every oracle and both epilogue modes."""
+    if _is_scalar_shift(shift):
+        if shift > 0:
+            v = jax.lax.shift_right_arithmetic(
+                v + (1 << (shift - 1)), shift)
+        return v
+    s = jnp.asarray(shift, jnp.int32)
+    half = jnp.where(s > 0, jnp.left_shift(1, jnp.maximum(s - 1, 0)), 0)
+    # jnp.right_shift broadcasts and is arithmetic for signed ints
+    return jnp.right_shift(v + half, s)
+
+
+def requant(acc: jnp.ndarray, shift, relu: bool) -> jnp.ndarray:
+    """int32 accumulator -> int8: round-half-up shift, relu, clip.
+    ``shift`` may be a per-lane int32 vector (per-channel quantization);
+    lanes ride the last axis of ``acc``."""
+    acc = round_shift(acc, shift)
     if relu:
         acc = jnp.maximum(acc, 0)
     return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro import configs, roofline
 from repro.configs.base import ALL_SHAPES
+from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
 from repro.optim import OptimizerConfig, make_train_step
@@ -64,18 +65,20 @@ def _compile_step(cfg, shape, mesh, options, batch_override=None):
     policy = ShardingPolicy(mesh, cfg, options)
     model = Model(cfg, remat=options.remat, policy=policy)
     specs = model.input_specs(shape, batch_override=batch_override)
-    with jax.set_mesh(mesh):
+    with mesh_mod.set_mesh(mesh):
         if shape.kind == "train":
             state_shape, state_spec, opt_cfg = _spec_train_state(model, policy)
             grad_spec = (state_spec["opt"]["mu"] if options.zero2_grads
                          else None)
             step_fn = make_train_step(model, opt_cfg,
                                       n_micro=options.n_micro,
-                                      grad_spec=grad_spec)
+                                      grad_spec=grad_spec,
+                                      act_constraint=policy.act)
             batch_specs = policy.batch_specs(specs, shape)
             lowered = jax.jit(
                 step_fn,
-                in_shardings=(state_spec, batch_specs),
+                in_shardings=mesh_mod.jit_shardings(
+                    mesh, (state_spec, batch_specs)),
                 donate_argnums=(0,),
             ).lower(state_shape, specs)
         elif shape.kind == "prefill":
@@ -88,7 +91,9 @@ def _compile_step(cfg, shape, mesh, options, batch_override=None):
                 return model.prefill(params, batch, cache_len=shape.seq_len)
 
             lowered = jax.jit(
-                prefill_fn, in_shardings=(pspecs, batch_specs),
+                prefill_fn,
+                in_shardings=mesh_mod.jit_shardings(
+                    mesh, (pspecs, batch_specs)),
             ).lower(params_shape, specs)
         else:  # decode
             params_shape = jax.eval_shape(
@@ -104,7 +109,8 @@ def _compile_step(cfg, shape, mesh, options, batch_override=None):
 
             lowered = jax.jit(
                 decode_fn,
-                in_shardings=(pspecs, batch_specs, cache_specs),
+                in_shardings=mesh_mod.jit_shardings(
+                    mesh, (pspecs, batch_specs, cache_specs)),
                 donate_argnums=(2,),
             ).lower(params_shape, specs, cache_shape)
     return lowered.compile()
@@ -127,7 +133,7 @@ def _depth_cfg(cfg, k: int):
 
 
 def _costs(compiled, exclude_trailing=None) -> Dict[str, float]:
-    ca = compiled.cost_analysis() or {}
+    ca = roofline.cost_analysis_dict(compiled)
     text = compiled.as_text()
     stats = roofline.parse_collectives(text)
     return {

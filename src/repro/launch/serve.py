@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
 from repro.sharding import PolicyOptions, ShardingPolicy
@@ -128,7 +129,7 @@ def main(argv=None) -> int:
     policy = ShardingPolicy(mesh, cfg, PolicyOptions(seq_shard_decode=False))
     model = Model(cfg, policy=policy)
     rng = np.random.default_rng(args.seed)
-    with jax.set_mesh(mesh):
+    with mesh_mod.set_mesh(mesh):
         params = model.init(jax.random.key(args.seed))
         server = Server(model, params, args.slots, args.cache_len)
         reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),

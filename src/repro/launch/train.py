@@ -33,6 +33,7 @@ from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataConfig, Prefetcher, make_source
 from repro.distributed import (StragglerMonitor, ef_compress,
                                init_error_feedback)
+from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import Model
 from repro.optim import (OptimizerConfig, init_train_state, make_train_step)
@@ -84,7 +85,7 @@ def main(argv=None) -> int:
                           global_batch=args.global_batch, seed=args.seed)
     source = make_source(data_cfg)
 
-    with jax.set_mesh(mesh):
+    with mesh_mod.set_mesh(mesh):
         state = init_train_state(model, jax.random.key(args.seed), opt_cfg)
         pspecs = policy.param_specs(state["params"])
         step_fn = make_train_step(model, opt_cfg)

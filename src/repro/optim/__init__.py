@@ -100,7 +100,7 @@ def apply_update(params: Params, grads: Params, opt_state: Params,
 
 def make_train_step(model, opt_cfg: OptimizerConfig,
                     compression=None, n_micro: int = 1,
-                    grad_spec=None) -> Callable:
+                    grad_spec=None, act_constraint=None) -> Callable:
     """Build the jittable train step: loss -> grads (optionally
     accumulated over n_micro microbatches, overlapping per-microbatch
     reductions with the next microbatch's compute) -> (optional
@@ -119,7 +119,8 @@ def make_train_step(model, opt_cfg: OptimizerConfig,
             loss, grads = make_accumulating_step(
                 model.loss, n_micro,
                 unroll=getattr(model, "unroll", False),
-                grad_spec=grad_spec)(params, batch)
+                grad_spec=grad_spec,
+                act_constraint=act_constraint)(params, batch)
         else:
             loss, grads = jax.value_and_grad(
                 lambda p: model.loss(p, batch))(params)

@@ -24,6 +24,16 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions:
+    0.4.x returns a list with one dict per program, newer jax returns
+    the dict directly.  Always returns a dict (possibly empty)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca
+
 PEAK_FLOPS = 197e12          # bf16 per chip
 PEAK_INT8 = 394e12
 HBM_BW = 819e9               # bytes/s
@@ -192,7 +202,7 @@ class RooflineReport:
 
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             chips: int, model_flops: float) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     try:

@@ -251,6 +251,14 @@ class ShardingPolicy:
                 return jax.lax.with_sharding_constraint(
                     x, NamedSharding(self.mesh,
                                      P(dp, self.model_axis, None, None)))
+            if dp is not None:
+                # heads indivisible: still pin the batch axis — an
+                # unconstrained activation lets the partitioner invent
+                # shardings that force involuntary full
+                # rematerialisation (global-tensor copies) across the
+                # scan body on some jax/XLA versions
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, P(dp, None, None, None)))
             return x
         return c(q), c(k), c(v)
 
@@ -288,7 +296,8 @@ class ShardingPolicy:
             mult = 1
             for a in reversed(seq_axes):
                 idx = idx + jax.lax.axis_index(a) * mult
-                mult = mult * jax.lax.axis_size(a)
+                # static mesh extent (jax.lax.axis_size is newer-jax)
+                mult = mult * int(self.mesh.shape[a])
             chunk = k_l.shape[2]
             offset = idx * chunk
             qg = q_l.reshape(q_l.shape[0], hkv, g, -1).astype(jnp.float32)
@@ -313,11 +322,11 @@ class ShardingPolicy:
             return o.reshape(q_l.shape[0], -1, 1, q_l.shape[-1]
                              ).astype(q_l.dtype)
 
-        return jax.shard_map(
+        from repro.launch.mesh import shard_map as compat_shard_map
+        return compat_shard_map(
             local, mesh=self.mesh,
             in_specs=(qspec, cspec, cspec, lspec),
             out_specs=qspec,
-            check_vma=False,
         )(q, k_cache, v_cache, lengths)
 
     # --------------------------------------------------------------- zero-1

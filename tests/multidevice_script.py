@@ -10,7 +10,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import (jit_shardings,  # noqa: E402
+                               make_compat_mesh, set_mesh,
+                               shard_map as compat_shard_map)
 
 from repro import configs  # noqa: E402
 from repro.models import layers as L  # noqa: E402
@@ -21,8 +25,7 @@ from repro.sharding import PolicyOptions, ShardingPolicy  # noqa: E402
 
 
 def check_flash_decoding():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 4), ("data", "model"))
     cfg = configs.get_smoke("qwen2-1.5b")
     policy = ShardingPolicy(mesh, cfg, PolicyOptions())
     policy._decode_seq_axes = ("model",)
@@ -32,7 +35,7 @@ def check_flash_decoding():
     kc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     vc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     lengths = jnp.asarray([s, s // 2, 7, s - 1], jnp.int32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got = policy.sharded_decode_attention(q, kc, vc, lengths, None)
         got_w = policy.sharded_decode_attention(q, kc, vc, lengths, 6)
     want = L.decode_attention(q, kc, vc, lengths, None)
@@ -62,11 +65,10 @@ def check_sharded_train_matches_single():
     s0, m0 = jax.jit(make_train_step(model0, opt))(state0, batch)
 
     # sharded
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 4), ("data", "model"))
     policy = ShardingPolicy(mesh, cfg)
     model1 = Model(cfg, policy=policy)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state1 = init_train_state(model1, jax.random.key(0), opt)
         pspec = policy.param_specs(state1["params"])
         state1 = {
@@ -88,8 +90,7 @@ def check_sharded_train_matches_single():
 
 def check_compressed_psum_distinct_shards():
     from repro.distributed import compressed_psum
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_compat_mesh((8,), ("data",))
     rng = np.random.default_rng(2)
     # shard along axis 0: each shard sees a distinct slice
     x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
@@ -108,8 +109,8 @@ def check_compressed_psum_distinct_shards():
         vsum = jax.lax.psum(q.astype(jnp.float32) * s, "data")
         return vsum / 8.0
 
-    got = jax.shard_map(body, mesh=mesh, in_specs=spec_in,
-                        out_specs=P(None, None), check_vma=False)(xs)
+    got = compat_shard_map(body, mesh=mesh, in_specs=spec_in,
+                           out_specs=P(None, None))(xs)
     np.testing.assert_allclose(np.asarray(got)[0], want[0], atol=0.05)
     print("compressed psum OK")
 
@@ -118,8 +119,7 @@ def check_dryrun_single_cell_small_mesh():
     """End-to-end: lower+compile a reduced arch on an 8-dev mesh with
     the production-policy code path (train + decode kinds)."""
     from repro.configs.base import ShapeConfig
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 4), ("data", "model"))
     for arch in ("qwen2-1.5b", "granite-moe-1b-a400m", "mamba2-2.7b",
                  "zamba2-2.7b", "whisper-large-v3", "qwen2-vl-2b"):
         cfg = configs.get_smoke(arch)
@@ -127,26 +127,27 @@ def check_dryrun_single_cell_small_mesh():
         model = Model(cfg, policy=policy)
         shape = ShapeConfig("t", "train", 32, 8)
         specs = model.input_specs(shape)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params_shape = jax.eval_shape(
                 lambda: model.init(jax.random.key(0)))
             pspec = policy.param_specs(params_shape)
             bspec = policy.batch_specs(specs, shape)
             compiled = jax.jit(
-                model.loss, in_shardings=(pspec, bspec)
+                model.loss,
+                in_shardings=jit_shardings(mesh, (pspec, bspec))
             ).lower(params_shape, specs).compile()
             assert compiled.cost_analysis() is not None
         # decode kind
         dshape = ShapeConfig("d", "decode", 64, 8)
         dspecs = model.input_specs(dshape)
         cache_shape = dspecs.pop("cache")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             bspec = policy.batch_specs(dict(dspecs, cache=cache_shape),
                                        dshape)
             cspec = bspec.pop("cache")
             compiled = jax.jit(
                 model.decode_step,
-                in_shardings=(pspec, bspec, cspec),
+                in_shardings=jit_shardings(mesh, (pspec, bspec, cspec)),
             ).lower(params_shape, dspecs, cache_shape).compile()
         print(f"  {arch}: small-mesh train+decode compile OK")
     print("small-mesh dryrun OK")

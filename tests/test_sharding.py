@@ -6,6 +6,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.launch.mesh import make_compat_mesh, set_mesh
 from repro.models.model import Model
 from repro.models import layers as L
 from repro.sharding import PolicyOptions, ShardingPolicy
@@ -16,8 +17,7 @@ def small_mesh(data=2, model=2):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(1, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((data, model), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_NAMES)
@@ -109,8 +109,7 @@ def test_sharded_decode_attention_matches_reference():
     n = len(jax.devices())
     if n < 2:
         pytest.skip("needs >=2 devices")
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((1, n), ("data", "model"))
     cfg = configs.get_smoke("qwen2-1.5b")
     policy = ShardingPolicy(mesh, cfg, PolicyOptions())
     policy._decode_seq_axes = ("model",)
@@ -120,7 +119,7 @@ def test_sharded_decode_attention_matches_reference():
     kc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     vc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     lengths = jnp.asarray([s // 2, s - 3], jnp.int32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got = policy.sharded_decode_attention(q, kc, vc, lengths, None)
     want = L.decode_attention(q, kc, vc, lengths, None)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -131,8 +130,7 @@ def test_sharded_decode_attention_with_window():
     n = len(jax.devices())
     if n < 2:
         pytest.skip("needs >=2 devices")
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((1, n), ("data", "model"))
     cfg = configs.get_smoke("h2o-danube-3-4b")
     policy = ShardingPolicy(mesh, cfg, PolicyOptions())
     policy._decode_seq_axes = ("model",)
@@ -142,7 +140,7 @@ def test_sharded_decode_attention_with_window():
     kc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     vc = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
     lengths = jnp.asarray([s - 1, s // 2], jnp.int32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got = policy.sharded_decode_attention(q, kc, vc, lengths, 6)
     want = L.decode_attention(q, kc, vc, lengths, 6)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -163,7 +161,7 @@ def test_policy_act_constraint_applies():
     mesh = small_mesh()
     policy = ShardingPolicy(mesh, cfg)
     dp = mesh.shape["data"]
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         x = jnp.zeros((2 * dp, 4, 8))
         y = jax.jit(policy.act)(x)
     assert y.shape == x.shape
