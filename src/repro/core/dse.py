@@ -22,6 +22,9 @@ vs 3.5 min ≈ 25 % faster).  We report wall time and unique-eval counts.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -31,6 +34,11 @@ from .resources import ResourceReport
 
 BETA = 0.01     # reward scale (percent -> [0, 1]), §4.4
 GAMMA = 0.1     # discount factor, §4.4
+
+#: Quota charged to a quarantined/failed candidate: far over every
+#: threshold, so both fitters treat it exactly like an over-quota
+#: compile (BF skips it, RL rewards -1) instead of dying on it.
+FAILED_PCT = 1e9
 
 Thresholds = Dict[str, float]
 DEFAULT_THRESHOLDS: Thresholds = {"lut": 100.0, "dsp": 100.0,
@@ -101,6 +109,164 @@ class _Memo:
             self.cache[option] = self.space.evaluate(option)
             self.simulated_time += self.eval_cost_s
         return self.cache[option]
+
+
+class EvalTimeout(RuntimeError):
+    """A candidate evaluation exceeded its wall-clock budget."""
+
+
+class RobustEvaluator(DesignSpace):
+    """Fault-tolerant wrapper around a ``DesignSpace`` oracle.
+
+    Real vendor-compiler calls hang, crash, and flake; a multi-hour
+    sweep must survive all three and be resumable.  This wrapper adds:
+
+      * **per-candidate timeout** — the underlying ``evaluate`` runs on
+        a daemon thread and is abandoned after ``timeout_s`` (a hung
+        compiler call cannot stall the sweep; the orphaned thread dies
+        with the process).  Timeouts are not retried: a hang is almost
+        never transient and each retry would cost another full budget.
+      * **retry with exponential backoff + jitter** — a raising
+        evaluation is retried up to ``retries`` times, sleeping
+        ``backoff_s * 2^k * (1 + jitter)`` between attempts
+        (deterministic jitter from ``seed``).
+      * **quarantine** — a candidate that exhausts its retries (or
+        times out) is recorded with its failure reason and charged a
+        :data:`FAILED_PCT` report (``fits=False``, every quota far over
+        threshold), so BF-DSE skips it and RL-DSE rewards it -1; the
+        search itself never sees the exception.
+      * **resumable journal** — every completed report and quarantine
+        decision is written through to ``journal_path`` (atomic
+        tmp+rename JSON).  A fresh evaluator pointed at the same
+        journal replays those results without touching the underlying
+        space — kill the sweep, rerun the command, and only the
+        remaining candidates compile.
+
+    ``stats`` counts evaluated / journal_hits / retries / errors /
+    timeouts / quarantined for reporting.
+    """
+
+    QUOTAS = ("lut", "dsp", "mem", "reg")
+
+    def __init__(self, space: DesignSpace,
+                 timeout_s: Optional[float] = None,
+                 retries: int = 2,
+                 backoff_s: float = 0.05,
+                 journal_path: Optional[str] = None,
+                 seed: int = 0):
+        self.space = space
+        self.timeout_s = timeout_s
+        self.retries = max(0, retries)
+        self.backoff_s = backoff_s
+        self.journal_path = journal_path
+        self._rng = np.random.default_rng(seed)
+        self.completed: Dict[str, dict] = {}
+        self.quarantined: Dict[str, str] = {}
+        self.stats = {"evaluated": 0, "journal_hits": 0, "retries": 0,
+                      "errors": 0, "timeouts": 0, "quarantined": 0}
+        if journal_path and os.path.exists(journal_path):
+            with open(journal_path) as f:
+                state = json.load(f)
+            self.completed = dict(state.get("completed", {}))
+            self.quarantined = dict(state.get("quarantined", {}))
+
+    # ------------------------------------------------ space delegation
+    def options(self) -> List[Tuple]:
+        return self.space.options()
+
+    def axes(self) -> List[List]:
+        return self.space.axes()
+
+    def axis_names(self) -> List[str]:
+        return self.space.axis_names()
+
+    def tiebreak(self, option: Tuple) -> float:
+        return self.space.tiebreak(option)
+
+    # ---------------------------------------------------------- oracle
+    @staticmethod
+    def _key(option: Tuple) -> str:
+        return json.dumps(list(option), default=str)
+
+    def _failed(self) -> ResourceReport:
+        return ResourceReport(percents={k: FAILED_PCT for k in self.QUOTAS},
+                              raw={}, fits=False)
+
+    def _attempt(self, option: Tuple) -> ResourceReport:
+        if self.timeout_s is None:
+            return self.space.evaluate(option)
+        box: dict = {}
+
+        def run():
+            try:
+                box["report"] = self.space.evaluate(option)
+            except BaseException as e:  # surfaced on the caller thread
+                box["error"] = e
+
+        t = threading.Thread(target=run, daemon=True,
+                             name=f"dse-eval-{self._key(option)}")
+        t.start()
+        t.join(self.timeout_s)
+        if t.is_alive():
+            raise EvalTimeout(f"evaluation of {option} exceeded "
+                              f"{self.timeout_s}s")
+        if "error" in box:
+            raise box["error"]
+        return box["report"]
+
+    def evaluate(self, option: Tuple) -> ResourceReport:
+        key = self._key(option)
+        if key in self.completed:
+            self.stats["journal_hits"] += 1
+            rec = self.completed[key]
+            return ResourceReport(percents=dict(rec["percents"]),
+                                  raw=dict(rec["raw"]),
+                                  fits=bool(rec["fits"]))
+        if key in self.quarantined:
+            self.stats["journal_hits"] += 1
+            return self._failed()
+        last: Optional[BaseException] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                self.stats["retries"] += 1
+                jitter = 1.0 + float(self._rng.random())
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)) * jitter)
+            try:
+                rep = self._attempt(option)
+            except EvalTimeout as e:
+                self.stats["timeouts"] += 1
+                last = e
+                break  # hangs are not retried — see class docstring
+            except Exception as e:
+                self.stats["errors"] += 1
+                last = e
+                continue
+            self.stats["evaluated"] += 1
+            self.completed[key] = {"percents": rep.percents, "raw": rep.raw,
+                                   "fits": rep.fits}
+            self._save()
+            return rep
+        self.quarantined[key] = f"{type(last).__name__}: {last}"
+        self.stats["quarantined"] += 1
+        self._save()
+        return self._failed()
+
+    def quarantined_options(self) -> List[Tuple[List, str]]:
+        """Quarantine list with the option decoded back from its key."""
+        return [(json.loads(k), why) for k, why in self.quarantined.items()]
+
+    def _save(self) -> None:
+        if not self.journal_path:
+            return
+        d = os.path.dirname(self.journal_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.journal_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"completed": self.completed,
+                       "quarantined": self.quarantined},
+                      f, indent=1, default=str)
+        os.replace(tmp, self.journal_path)
 
 
 def _within(report: ResourceReport, th: Thresholds) -> bool:

@@ -63,6 +63,30 @@ class GraphError(ValueError):
     pass
 
 
+class GraphValidationError(GraphError):
+    """Structured ingress-validation failure.
+
+    Raised when an imported model is rejected *before* any staging work:
+    non-finite weights, malformed containers, dangling edges.  Carries
+    machine-readable fields so callers (CLI, serving admission) can
+    report what was wrong without parsing the message.
+    """
+
+    def __init__(self, reason: str, *, node: str = "", tensor: str = "",
+                 detail: str = ""):
+        self.reason = reason
+        self.node = node
+        self.tensor = tensor
+        self.detail = detail
+        where = " ".join(p for p in (
+            f"node={node}" if node else "",
+            f"tensor={tensor}" if tensor else "") if p)
+        msg = reason + (f" [{where}]" if where else "")
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
 def conv_output_hw(
     in_hw: Sequence[int],
     kernel_shape: Sequence[int],

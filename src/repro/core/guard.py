@@ -1,0 +1,279 @@
+"""Guarded execution: per-stage audits + a declarative degradation
+policy over the int8 runtime (DESIGN.md §9).
+
+The fused executor is a single jitted closure; the guard rides on it
+without breaking that property.  ``make_executor(audit=True)`` makes
+the *same* closure additionally return per-stage int8 statistics
+(saturation fraction, max |value|, mean |value| — computed on-device,
+three scalars per stage, negligible next to the conv bands).  The
+guard then performs a **host-side dequant audit**: each stage's stats
+are scaled by the tensor's fixed-point position (``2^-m`` from
+:func:`pipeline.thread_scales`) and compared against calibration-time
+envelopes recorded from the *golden* program.  A stage outside its
+envelope — saturating more than calibration ever saw, or with a mean
+magnitude drifted past the margin — is flagged as a suspected upset.
+
+Degradation ladder (in order; each rung audits its own output):
+
+  1. ``reexecute``          — run the same program again.  Recovers
+     transient in-flight upsets (an SEU in a line buffer does not
+     repeat); a persistent fault (corrupted staged weight) re-flags
+     and escalates.
+  2. ``fallback:unfused``   — rebuild from the golden graph + specs
+     with ``fuse_skip=False`` (the bit-exact standalone-merge program
+     that always exists) and re-run.  This is the FPGA
+     reconfigure-from-flash move: the corrupted staged image is
+     abandoned for a freshly staged one on the fallback datapath.
+  3. ``fallback:per_tensor`` — additionally degrade per-channel weight
+     scales to per-tensor (``m_w := min(m_w)`` per layer, the max-abs
+     rule's scalar answer).  Numerically coarser but structurally
+     simpler — the last rung before giving up.  Skipped when the
+     program is already per-tensor.
+
+With guards *off* the builder returns the plain
+``pipeline.make_executor`` closure — byte-identical program, probed by
+jaxpr identity in the tests.  Fallback programs and their envelopes
+are built lazily on first escalation and cached, so a healthy guarded
+deployment pays only the three-scalar audit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import parser as P
+from . import pipeline as pipe
+from .quantize import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Declarative degradation policy + audit tolerances.
+
+    ``margin`` is the relative slack on the dequantized max/mean
+    statistics (0.25 = 25% drift allowed); ``sat_tol`` is absolute
+    slack on the saturation fraction.  Tight values (0.0) make the
+    audit flag *any* deviation from the calibration run — what the
+    deterministic fault-injection tests use."""
+
+    margin: float = 0.25
+    sat_tol: float = 0.02
+    retry: bool = True
+    fallback_unfused: bool = True
+    fallback_per_tensor: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardEnvelope:
+    """Calibration-time expected ranges, float (dequantized) domain:
+    ``tensor -> (sat_frac, max_abs, mean_abs)``."""
+
+    stats: Dict[str, Tuple[float, float, float]]
+
+
+@dataclasses.dataclass
+class StageAudit:
+    """One stage's audited statistics vs. its envelope."""
+
+    stage: str
+    tensor: str
+    sat: float
+    max_abs: float
+    mean_abs: float
+    flagged: bool
+    reasons: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class ActionResult:
+    """One degradation-ladder rung: which stages were still flagged
+    after applying it (empty = the rung recovered the run)."""
+
+    action: str
+    flagged: List[str]
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """Structured outcome of one guarded inference."""
+
+    flagged: List[str]          # stages flagged on the primary run
+    audits: List[StageAudit]    # primary-run audit detail
+    actions: List[ActionResult]
+    recovered_by: Optional[str]
+    degraded: bool              # served from a fallback program
+    ok: bool                    # final output passed its audit
+
+    @property
+    def detected(self) -> bool:
+        return bool(self.flagged)
+
+
+@dataclasses.dataclass
+class _Level:
+    """One executable program level: the quantized program, its audited
+    one-jitted closure, per-tensor fixed-point positions and the
+    calibration envelope recorded from it."""
+
+    qm: pipe.QuantizedModel
+    ex: Callable
+    tensor_m: Dict[str, int]
+    envelope: GuardEnvelope
+
+
+def _scalar_specs(specs: Dict[str, QuantSpec]) -> Dict[str, QuantSpec]:
+    """Degrade per-channel specs to per-tensor: every lane quantizes at
+    the minimum lane exponent (the scalar max-abs answer — the lane
+    with the largest weights already pinned it)."""
+    return {name: (dataclasses.replace(s, m_w=s.m_w_min)
+                   if s.per_channel else s)
+            for name, s in specs.items()}
+
+
+class GuardedExecutor:
+    """Audited executor + degradation ladder over a built program.
+
+    ``gate`` is the golden source of truth (a
+    :class:`~repro.core.synthesis.CNN2Gate` with quantization applied):
+    fallback programs are rebuilt from its graph and specs, exactly as
+    an FPGA would reconfigure from the golden image in flash.  ``qm``
+    is the *deployed* program — pass a fault-injected model (and/or
+    ``faults`` for in-flight activation faults) to exercise the guard;
+    it defaults to the golden program itself.
+
+    Calling the executor returns ``(logits, GuardReport)``.
+    """
+
+    def __init__(self, gate, x_cal, policy: Optional[GuardPolicy] = None,
+                 qm: Optional[pipe.QuantizedModel] = None,
+                 n_i: int = 16, n_l: int = 32,
+                 block_h: Optional[int] = None,
+                 interpret: Optional[bool] = True,
+                 faults: Optional[Dict] = None):
+        if gate.quantized is None or gate.specs is None:
+            raise RuntimeError("apply_quantization() or "
+                               "calibrate_quantization() first")
+        self.gate = gate
+        self.policy = policy or GuardPolicy()
+        self._kw = dict(n_i=n_i, n_l=n_l, block_h=block_h,
+                        interpret=interpret)
+        self.x_cal = jnp.asarray(x_cal)
+        self._gold = self._make_level(gate.quantized, gate.specs)
+        qm = gate.quantized if qm is None else qm
+        if qm is gate.quantized and not faults:
+            primary_ex = self._gold.ex
+        else:
+            primary_ex = pipe.make_executor(qm, audit=True, faults=faults,
+                                            **self._kw)
+        self._primary = (qm, primary_ex)
+        self._fallbacks: Dict[str, Optional[_Level]] = {}
+
+    def with_program(self, qm: pipe.QuantizedModel,
+                     faults: Optional[Dict] = None) -> "GuardedExecutor":
+        """Cheap re-deployment: a new guarded executor over a different
+        (e.g. freshly fault-injected) program that SHARES this one's
+        golden envelope and already-built fallback levels — what the
+        fault-injection bench sweeps trial programs through."""
+        other = object.__new__(GuardedExecutor)
+        other.__dict__ = dict(self.__dict__)
+        other._primary = (qm, pipe.make_executor(qm, audit=True,
+                                                 faults=faults,
+                                                 **self._kw))
+        return other
+
+    # ------------------------------------------------ level construction
+    def _make_level(self, qm: pipe.QuantizedModel,
+                    specs: Dict[str, QuantSpec]) -> _Level:
+        ex = pipe.make_executor(qm, audit=True, **self._kw)
+        tensor_m = pipe.thread_scales(qm.parsed, specs)
+        _, stats = ex(self.x_cal)
+        env = {t: self._dequant(t, np.asarray(s), tensor_m)
+               for t, s in stats.items()}
+        return _Level(qm, ex, tensor_m, GuardEnvelope(env))
+
+    @staticmethod
+    def _dequant(tensor: str, s: np.ndarray,
+                 tensor_m: Dict[str, int]) -> Tuple[float, float, float]:
+        scale = 2.0 ** -tensor_m.get(tensor, 0)
+        return (float(s[0]), float(s[1]) * scale, float(s[2]) * scale)
+
+    def _fallback(self, name: str) -> Optional[_Level]:
+        if name not in self._fallbacks:
+            parsed_u = P.parse(self.gate.parsed.graph, fuse_skip=False)
+            if name == "unfused":
+                specs = dict(self.gate.specs)
+            else:  # per_tensor (implies unfused: the simplest datapath)
+                if not any(s.per_channel for s in self.gate.specs.values()):
+                    self._fallbacks[name] = None
+                    return None
+                specs = _scalar_specs(self.gate.specs)
+            qm = pipe.build_quantized(parsed_u, specs)
+            self._fallbacks[name] = self._make_level(qm, specs)
+        return self._fallbacks[name]
+
+    # ------------------------------------------------------------- audit
+    def _check(self, qm: pipe.QuantizedModel, stats: Dict,
+               level: _Level) -> List[StageAudit]:
+        """Host-side dequant audit of one run against a level's
+        calibration envelope, in schedule order.  Tensors without an
+        envelope entry (extra intermediates of a fallback program) are
+        skipped."""
+        pol = self.policy
+        audits: List[StageAudit] = []
+        for ql in qm.layers:
+            t = ql.info.output
+            if t not in stats or t not in level.envelope.stats:
+                continue
+            sat, mx, mean = self._dequant(t, np.asarray(stats[t]),
+                                          level.tensor_m)
+            e_sat, e_max, e_mean = level.envelope.stats[t]
+            reasons = []
+            if sat > e_sat + pol.sat_tol:
+                reasons.append(f"saturation {sat:.4f} > {e_sat:.4f}")
+            if mx > e_max * (1.0 + pol.margin):
+                reasons.append(f"max_abs {mx:.4g} > {e_max:.4g}")
+            if mean > e_mean * (1.0 + pol.margin) or \
+                    mean * (1.0 + pol.margin) < e_mean:
+                reasons.append(f"mean_abs {mean:.4g} vs {e_mean:.4g}")
+            audits.append(StageAudit(ql.info.name, t, sat, mx, mean,
+                                     bool(reasons), tuple(reasons)))
+        return audits
+
+    # --------------------------------------------------------- inference
+    def __call__(self, x) -> Tuple[jnp.ndarray, GuardReport]:
+        x = jnp.asarray(x)
+        qm, ex = self._primary
+        y, stats = ex(x)
+        audits = self._check(qm, stats, self._gold)
+        flagged = [a.stage for a in audits if a.flagged]
+        if not flagged:
+            return y, GuardReport(flagged, audits, [], None, False, True)
+        actions: List[ActionResult] = []
+        if self.policy.retry:
+            y2, stats2 = ex(x)
+            f2 = [a.stage for a in self._check(qm, stats2, self._gold)
+                  if a.flagged]
+            actions.append(ActionResult("reexecute", f2))
+            if not f2:  # transient upset: same program now in envelope
+                return y2, GuardReport(flagged, audits, actions,
+                                       "reexecute", False, True)
+        for name, enabled in (("unfused", self.policy.fallback_unfused),
+                              ("per_tensor",
+                               self.policy.fallback_per_tensor)):
+            if not enabled:
+                continue
+            lvl = self._fallback(name)
+            if lvl is None:
+                continue
+            yl, statsl = lvl.ex(x)
+            fl = [a.stage for a in self._check(lvl.qm, statsl, lvl)
+                  if a.flagged]
+            actions.append(ActionResult(f"fallback:{name}", fl))
+            y = yl
+            if not fl:
+                return y, GuardReport(flagged, audits, actions, name,
+                                      True, True)
+        return y, GuardReport(flagged, audits, actions, None, True, False)

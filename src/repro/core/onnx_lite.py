@@ -21,9 +21,26 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from .graph import Graph, Node, TensorInfo
+from .graph import Graph, GraphError, GraphValidationError, Node, TensorInfo
 
 FORMAT_VERSION = 1
+
+
+def validate_initializers(initializers: Optional[Dict[str, np.ndarray]],
+                          ) -> None:
+    """Reject non-finite imported weights at the door.
+
+    A NaN/Inf in an initializer silently poisons calibration (max-abs
+    over NaN is NaN -> every quantized value is garbage), so ingress is
+    the only place it can be caught cheaply and attributed to a tensor.
+    """
+    for name, arr in (initializers or {}).items():
+        arr = np.asarray(arr)
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            bad = int(np.size(arr) - np.isfinite(arr).sum())
+            raise GraphValidationError(
+                "non-finite initializer", tensor=name,
+                detail=f"{bad} NaN/Inf of {arr.size} values")
 
 
 def to_model_dict(graph: Graph) -> Dict[str, Any]:
@@ -53,27 +70,43 @@ def from_model_dict(
 ) -> Graph:
     if model.get("format_version", 1) > FORMAT_VERSION:
         raise ValueError("model produced by a newer exporter")
-    nodes = [
-        Node(
-            op_type=n["op_type"],
-            name=n.get("name", f'{n["op_type"]}_{i}'),
-            inputs=list(n["inputs"]),
-            outputs=list(n["outputs"]),
-            attrs=dict(n.get("attrs", {})),
+    for key in ("nodes", "inputs", "outputs"):
+        if not isinstance(model.get(key), list):
+            raise GraphValidationError("malformed model container",
+                                       detail=f"missing/non-list {key!r}")
+    try:
+        nodes = [
+            Node(
+                op_type=n["op_type"],
+                name=n.get("name", f'{n["op_type"]}_{i}'),
+                inputs=list(n["inputs"]),
+                outputs=list(n["outputs"]),
+                attrs=dict(n.get("attrs", {})),
+            )
+            for i, n in enumerate(model["nodes"])
+        ]
+        inputs = [
+            TensorInfo(t["name"], tuple(t["shape"]), t.get("dtype", "float32"))
+            for t in model["inputs"]
+        ]
+    except (KeyError, TypeError) as e:
+        raise GraphValidationError("malformed model container",
+                                   detail=repr(e)) from e
+    validate_initializers(initializers)
+    try:
+        return Graph(
+            name=model.get("name", "model"),
+            nodes=nodes,
+            inputs=inputs,
+            outputs=list(model["outputs"]),
+            initializers=initializers,
         )
-        for i, n in enumerate(model["nodes"])
-    ]
-    inputs = [
-        TensorInfo(t["name"], tuple(t["shape"]), t.get("dtype", "float32"))
-        for t in model["inputs"]
-    ]
-    return Graph(
-        name=model.get("name", "model"),
-        nodes=nodes,
-        inputs=inputs,
-        outputs=list(model["outputs"]),
-        initializers=initializers,
-    )
+    except GraphValidationError:
+        raise
+    except GraphError as e:
+        # structural problems in an *imported* model are ingress failures
+        raise GraphValidationError("invalid graph structure",
+                                   detail=str(e)) from e
 
 
 def save(graph: Graph, path: str) -> None:

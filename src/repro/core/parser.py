@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph import Graph, Node, _norm2, _norm4
+from .graph import Graph, GraphValidationError, Node, _norm2, _norm4
 
 # Pipeline stage kinds (the paper's five kernel roles; memory read/write
 # kernels bracket every stage implicitly).
@@ -247,6 +247,7 @@ def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
     (see :func:`_fold_skip_adds`) — the paper's keep-it-on-chip rule
     applied to skip connections.  ``fuse_skip=False`` keeps every merge
     a standalone stage (the bit-exact two-stage fallback program)."""
+    validate_ingress(graph)
     layers: List[LayerInfo] = []
     consumed: set = set()
     alias: Dict[str, str] = {}
@@ -300,9 +301,9 @@ def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
     for li in layers:
         for t in li.inputs:
             if t not in produced and t != inp.name:
-                raise ValueError(
-                    f"stage {li.name!r} reads tensor {t!r} that no "
-                    "scheduled stage produces")
+                raise GraphValidationError(
+                    "dangling stage input: no scheduled stage produces it",
+                    node=li.name, tensor=t)
 
     return ParsedModel(
         name=graph.name,
@@ -312,6 +313,30 @@ def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
         input_shape=tuple(inp.shape),
         output_name=canon(graph.outputs[0]),
     )
+
+
+def validate_ingress(graph: Graph) -> None:
+    """Reject models the synthesis flow must not stage (DESIGN.md §9).
+
+    Checked before any scheduling work: every float initializer must be
+    finite (a NaN/Inf weight poisons max-abs calibration and every
+    downstream quantized value), and every Conv/Gemm weight operand must
+    actually be an initializer — a weight coming in as a dynamic tensor
+    cannot be staged into on-chip memory."""
+    for name, arr in graph.initializers.items():
+        arr = np.asarray(arr)
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            bad = int(np.size(arr) - np.isfinite(arr).sum())
+            raise GraphValidationError(
+                "non-finite initializer", tensor=name,
+                detail=f"{bad} NaN/Inf of {arr.size} values")
+    for node in graph.nodes:
+        if node.op_type in ("Conv", "Gemm") and len(node.inputs) > 1:
+            w = node.inputs[1]
+            if w not in graph.initializers:
+                raise GraphValidationError(
+                    "weight operand is not an initializer",
+                    node=node.name, tensor=w)
 
 
 def raise_if_unfused(graph: Graph, node: Node, layers: List[LayerInfo]) -> None:

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.kernels import ops
 from . import parser as P
-from .quantize import QuantSpec, quantize_weights
+from .quantize import INT8_MAX, INT8_MIN, QuantSpec, quantize_weights
 
 
 @dataclasses.dataclass
@@ -274,9 +274,40 @@ def _concat_axis(axis: int, ndim: int) -> int:
     return axis
 
 
+def _apply_tensor_faults(h: jnp.ndarray, f: Dict) -> jnp.ndarray:
+    """Apply in-flight activation faults (core/faults.py) to one named
+    tensor inside the jitted program: XOR bit masks at flat indices
+    (SEU bit flips) and zeroed flat ranges (dropped bursts)."""
+    flat = h.reshape(-1)
+    idx = f.get("xor_idx")
+    if idx is not None and len(idx):
+        ji = jnp.asarray(idx)
+        mask = jnp.asarray(f["xor_mask"]).astype(h.dtype)
+        flat = flat.at[ji].set(jax.lax.bitwise_xor(flat[ji], mask))
+    z = f.get("zero_idx")
+    if z is not None and len(z):
+        flat = flat.at[jnp.asarray(z)].set(0)
+    return flat.reshape(h.shape)
+
+
+def _stage_stats(h: jnp.ndarray) -> jnp.ndarray:
+    """int8-domain audit statistics of one stage output, computed
+    inside the jitted closure: ``[saturation fraction, max |value|,
+    mean |value|]``.  The guard (core/guard.py) dequantizes these
+    host-side with the tensor's fixed-point position and compares them
+    against calibration-time envelopes."""
+    sat = jnp.mean(((h == INT8_MAX) | (h == INT8_MIN))
+                   .astype(jnp.float32))
+    a = jnp.abs(h.astype(jnp.int32)).astype(jnp.float32)
+    return jnp.stack([sat, jnp.max(a), jnp.mean(a)])
+
+
 def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                   block_h: Optional[int] = None,
-                  interpret: Optional[bool] = None
+                  interpret: Optional[bool] = None,
+                  *,
+                  audit: bool = False,
+                  faults: Optional[Dict[str, Dict]] = None
                   ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Build the whole-network fused executor: ONE jitted closure that
     interprets the DAG stage program over a tensor environment.
@@ -303,6 +334,13 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     soon as the schedule passes it — the program's peak live set (what
     the FPGA would hold in DDR-visible buffers) is what the DSE's branch
     rules score, not one threaded activation.
+
+    ``audit=True`` makes the closure additionally return per-stage
+    int8 audit statistics (``{tensor: [sat_frac, max_abs, mean_abs]}``)
+    for the guarded-execution layer; ``faults`` injects in-flight
+    activation faults (see core/faults.py).  Both default off, and when
+    off NOTHING extra is traced — the emitted jaxpr is byte-identical
+    to the unguarded executor (probed in tests).
     """
     block_cout = max(8 * n_l, 8)
     block_cin = max(8 * n_i, 8)
@@ -322,7 +360,10 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
         h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
         if h.ndim == 4:
             h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
+        if faults and in_name in faults:
+            h = _apply_tensor_faults(h, faults[in_name])
         env: Dict[str, jnp.ndarray] = {in_name: h}
+        stats: Dict[str, jnp.ndarray] = {}
         for idx, ql in enumerate(stages):
             li = ql.info
             if li.kind == P.CONV:
@@ -370,6 +411,10 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                                      relu=li.relu)
             else:  # pragma: no cover - parser only emits the five kinds
                 raise ValueError(li.kind)
+            if faults and li.output in faults:
+                h = _apply_tensor_faults(h, faults[li.output])
+            if audit:
+                stats[li.output] = _stage_stats(h)
             env[li.output] = h
             for t in li.inputs:     # liveness-based buffer release
                 if last_use.get(t) == idx:
@@ -380,6 +425,8 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
         logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
         if out_stage is not None and out_stage.softmax:
             logits = jax.nn.softmax(logits, axis=-1)
+        if audit:
+            return logits, stats
         return logits
 
     return jax.jit(forward)

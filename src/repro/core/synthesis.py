@@ -291,6 +291,41 @@ class CNN2Gate:
             return jitted
         raise ValueError(f"unknown mode {mode!r}")
 
+    def build_guarded(self, x_cal=None, policy=None,
+                      qm: Optional[pipe.QuantizedModel] = None,
+                      faults: Optional[Dict] = None,
+                      mode: str = "emulation", n_i: int = 16,
+                      n_l: int = 32, block_h: Optional[int] = None):
+        """Guarded-execution build (DESIGN.md §9).
+
+        With ``policy=None`` guards are OFF and this returns the plain
+        :func:`pipeline.make_executor` closure — the byte-identical
+        program (jaxpr-identity probed in tests), zero overhead.
+
+        With a :class:`~repro.core.guard.GuardPolicy`, returns a
+        :class:`~repro.core.guard.GuardedExecutor` whose calls yield
+        ``(logits, GuardReport)``: per-stage dequant audits against
+        envelopes calibrated on ``x_cal`` from the *golden* program,
+        plus the reexecute → unfused → per-tensor degradation ladder.
+        ``qm``/``faults`` deploy a fault-injected program under the
+        guard (defaults: the golden program, no faults)."""
+        if self.quantized is None:
+            raise RuntimeError("apply_quantization() or "
+                               "calibrate_quantization() first")
+        interpret = (True if mode == "emulation"
+                     else jax.default_backend() != "tpu")
+        if policy is None:
+            return pipe.make_executor(qm or self.quantized, n_i, n_l,
+                                      block_h=block_h,
+                                      interpret=interpret)
+        if x_cal is None:
+            raise ValueError("guarded mode needs a calibration input "
+                             "(x_cal) to record audit envelopes")
+        from . import guard as guard_mod
+        return guard_mod.GuardedExecutor(
+            self, x_cal, policy=policy, qm=qm, faults=faults,
+            n_i=n_i, n_l=n_l, block_h=block_h, interpret=interpret)
+
     # ------------------------------------------------------ latency model
     def latency_report(self, board: str, n_i: int, n_l: int) -> LatencyReport:
         """Analytical Table-1/Fig-6 latency model (see resources.py).

@@ -89,33 +89,65 @@ def make_source(cfg: DataConfig):
     return MmapTokens(cfg) if cfg.source == "mmap" else SyntheticLM(cfg)
 
 
+#: Queue marker the producer enqueues after recording a failure, so the
+#: consumer wakes up and re-raises instead of blocking forever.
+_SENTINEL = object()
+
+
 class Prefetcher:
-    """Double-buffered background prefetch keyed by step (resumable)."""
+    """Double-buffered background prefetch keyed by step (resumable).
+
+    A failing source must not hang training: if ``batch_at`` raises, the
+    producer records the exception and enqueues a sentinel; the consumer
+    drains any already-buffered good batches, then re-raises the
+    producer's error as a ``RuntimeError`` (with the original chained as
+    ``__cause__``) instead of blocking on an empty queue forever."""
 
     def __init__(self, source, start_step: int = 0, depth: int = 2):
         self.source = source
         self.step = start_step
         self.q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
         self.thread = threading.Thread(target=self._run, daemon=True)
         self.thread.start()
 
     def _run(self):
         step = self.step
-        while not self._stop.is_set():
-            batch = self.source.batch_at(step)
-            try:
-                self.q.put((step, batch), timeout=0.5)
-                step += 1
-            except queue.Full:
-                continue
+        try:
+            while not self._stop.is_set():
+                batch = self.source.batch_at(step)
+                try:
+                    self.q.put((step, batch), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+        except BaseException as e:
+            self._error = e
+            while not self._stop.is_set():
+                try:
+                    self.q.put(_SENTINEL, timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        step, batch = self.q.get()
-        return step, batch
+        while True:
+            try:
+                item = self.q.get(timeout=0.5)
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "data producer failed") from self._error
+                if not self.thread.is_alive():
+                    raise RuntimeError("data producer thread died")
+                continue
+            if item is _SENTINEL:
+                raise RuntimeError("data producer failed") from self._error
+            return item
 
     def close(self):
         self._stop.set()

@@ -71,6 +71,16 @@ def main() -> int:
                     help="tolerated HBM-residency quota %% (the paper's "
                          "user-provided T_th; raise it when scoring with "
                          "the conservative unfused CPU-backend bound)")
+    ap.add_argument("--robust", action="store_true",
+                    help="wrap the space in a RobustEvaluator (timeout, "
+                         "retry, quarantine, resumable journal)")
+    ap.add_argument("--eval-timeout-s", type=float, default=None,
+                    help="robust mode: per-candidate wall-clock budget")
+    ap.add_argument("--eval-retries", type=int, default=2,
+                    help="robust mode: retries for raising evaluations")
+    ap.add_argument("--journal", default=None,
+                    help="robust mode: JSON journal path; rerunning with "
+                         "the same journal resumes the sweep")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if (args.arch is None) == (args.cnn is None):
@@ -95,6 +105,13 @@ def main() -> int:
         space = ShardingSpace(args.arch, args.shape,
                               axes=parse_axes(args.axes),
                               eval_depth=args.eval_depth)
+    robust = None
+    if args.robust or args.journal or args.eval_timeout_s is not None:
+        robust = dse.RobustEvaluator(space,
+                                     timeout_s=args.eval_timeout_s,
+                                     retries=args.eval_retries,
+                                     journal_path=args.journal)
+        space = robust
     thresholds = dict(dse.DEFAULT_THRESHOLDS)
     thresholds["lut"] = args.lut_threshold
     thresholds["mem"] = max(thresholds["mem"], args.lut_threshold)
@@ -110,6 +127,10 @@ def main() -> int:
     print(f"best option: {dict(zip(names, res.best)) if res.best else None}")
     print(f"F_avg={res.f_max:.1f}  compiles={res.evaluations}  "
           f"wall={res.wall_time_s:.0f}s")
+    if robust is not None:
+        print(f"robust: {robust.stats}")
+        for opt, why in robust.quarantined_options():
+            print(f"quarantined: {dict(zip(names, opt))} ({why})")
     if res.best_report is not None:
         print("quotas:", {k: round(v, 1)
                           for k, v in res.best_report.percents.items()})
@@ -126,6 +147,13 @@ def main() -> int:
                 {"option": dict(zip(names, o)), "f_avg": f, "fits": ok}
                 for o, f, ok in res.history],
         }
+        if robust is not None:
+            payload["robust"] = {
+                "stats": robust.stats,
+                "quarantined": [
+                    {"option": dict(zip(names, o)), "reason": why}
+                    for o, why in robust.quarantined_options()],
+            }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1, default=str)
     return 0

@@ -27,32 +27,70 @@ from repro.sharding import PolicyOptions, ShardingPolicy
 
 
 class Request:
-    def __init__(self, rid: int, prompt: np.ndarray, max_new: int):
+    def __init__(self, rid: int, prompt: np.ndarray, max_new: int,
+                 deadline_s: Optional[float] = None):
         self.rid = rid
         self.prompt = prompt
         self.max_new = max_new
+        self.deadline_s = deadline_s
+        self.submitted_at: Optional[float] = None
         self.output: List[int] = []
         self.done = False
+        self.rejected = False          # shed at admission (queue full)
+        self.expired = False           # deadline passed before completion
+
+    def past_deadline(self, now: float) -> bool:
+        return (self.deadline_s is not None
+                and self.submitted_at is not None
+                and now - self.submitted_at > self.deadline_s)
 
 
 class Server:
-    """Slot-based continuous batching engine."""
+    """Slot-based continuous batching engine.
 
-    def __init__(self, model: Model, params, slots: int, cache_len: int):
+    Admission is bounded: at most ``max_queue`` requests wait for a
+    slot; past that, ``submit`` sheds the request (returns ``False``,
+    marks it ``rejected``) instead of growing the queue without limit.
+    A request carrying ``deadline_s`` is dropped — queued or mid-decode
+    — once its deadline passes (``expired``), freeing its slot for
+    requests that can still be served in time."""
+
+    def __init__(self, model: Model, params, slots: int, cache_len: int,
+                 max_queue: int = 64):
         self.model = model
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
+        self.max_queue = max_queue
         self.cache = model.init_cache(slots, cache_len)
         self.lengths = np.zeros((slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        self.rejected = 0
+        self.expired = 0
         self._decode = jax.jit(model.decode_step)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        if len(self.queue) >= self.max_queue:
+            req.rejected = True
+            req.done = True
+            self.rejected += 1
+            return False
+        req.submitted_at = time.monotonic()
         self.queue.append(req)
+        return True
 
     def _admit(self) -> None:
+        now = time.monotonic()
+        live = []
+        for req in self.queue:
+            if req.past_deadline(now):
+                req.expired = True
+                req.done = True
+                self.expired += 1
+            else:
+                live.append(req)
+        self.queue = live
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
@@ -80,6 +118,14 @@ class Server:
     def step(self) -> None:
         """One decode step across all active slots (true batching)."""
         self._admit()
+        now = time.monotonic()
+        for s, req in enumerate(self.slot_req):
+            if req is not None and req.past_deadline(now):
+                req.expired = True
+                req.done = True
+                self.slot_req[s] = None
+                self.lengths[s] = 0
+                self.expired += 1
         tokens = np.zeros((self.slots, 1), np.int32)
         active = []
         for s, req in enumerate(self.slot_req):
@@ -120,6 +166,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission bound: submissions past this many "
+                         "queued requests are shed")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline; late requests are "
+                         "dropped instead of completing")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -131,9 +183,11 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     with mesh_mod.set_mesh(mesh):
         params = model.init(jax.random.key(args.seed))
-        server = Server(model, params, args.slots, args.cache_len)
+        server = Server(model, params, args.slots, args.cache_len,
+                        max_queue=args.max_queue)
         reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
-                        args.max_new) for i in range(args.requests)]
+                        args.max_new, deadline_s=args.deadline_s)
+                for i in range(args.requests)]
         for r in reqs:
             server.submit(r)
         t0 = time.perf_counter()
@@ -147,6 +201,9 @@ def main(argv=None) -> int:
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {steps} engine steps)")
+    if server.rejected or server.expired:
+        print(f"admission: rejected={server.rejected} "
+              f"expired={server.expired}")
     assert all(r.done for r in reqs)
     return 0
 

@@ -134,6 +134,25 @@ def test_prefetcher_resumes_at_step():
     pf.close()
 
 
+def test_prefetcher_propagates_producer_error():
+    """A failing source must surface on the consumer thread — after the
+    already-buffered good batches — instead of hanging ``__next__``."""
+    class Corrupt:
+        def batch_at(self, step):
+            if step >= 2:
+                raise ValueError("corrupt shard")
+            return {"tokens": np.zeros((1, 2), np.int32)}
+
+    pf = Prefetcher(Corrupt(), start_step=0, depth=2)
+    got = []
+    with pytest.raises(RuntimeError, match="producer failed") as ei:
+        for _ in range(5):
+            got.append(next(pf)[0])
+    assert got == [0, 1]            # buffered batches drain first
+    assert isinstance(ei.value.__cause__, ValueError)
+    pf.close()
+
+
 def test_synthetic_data_is_learnable():
     """The synthetic LM has structure: a bigram table beats uniform."""
     src = make_source(DataConfig(vocab_size=32, seq_len=64, global_batch=16,

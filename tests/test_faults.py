@@ -1,0 +1,101 @@
+"""Fault-injection layer: plan determinism, golden-image non-mutation,
+and the jaxpr-identity guarantee of the executor's fault hooks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import pipeline as pipe
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def gate():
+    g = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
+    x = (RNG.standard_normal((1, 3, 32, 32)) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x)
+    return g, x
+
+
+def test_sample_deterministic_in_seed(gate):
+    g, _ = gate
+    kinds = (F.WEIGHT_BIT, F.BIAS_BIT, F.SCALE, F.DROPPED_TILE,
+             F.ACTIVATION_BIT, F.ACTIVATION_TILE)
+    a = F.FaultPlan.sample(g.quantized, 16, kinds=kinds, seed=3)
+    b = F.FaultPlan.sample(g.quantized, 16, kinds=kinds, seed=3)
+    assert a == b
+    c = F.FaultPlan.sample(g.quantized, 16, kinds=kinds, seed=4)
+    assert a != c
+
+
+def test_inject_returns_new_model_golden_untouched(gate):
+    g, _ = gate
+    qm = g.quantized
+    golden = [np.array(ql.w_q) for ql in qm.layers if ql.w_q is not None]
+    plan = F.FaultPlan.sample(qm, 4, kinds=(F.WEIGHT_BIT,), seed=0)
+    qm_f = F.inject(qm, plan)
+    assert qm_f is not qm
+    after = [np.array(ql.w_q) for ql in qm.layers if ql.w_q is not None]
+    for w0, w1 in zip(golden, after):
+        np.testing.assert_array_equal(w0, w1)
+    # the corrupted program differs from the golden one
+    diff = sum(int((np.array(a.w_q) != np.array(b.w_q)).sum())
+               for a, b in zip(qm.layers, qm_f.layers)
+               if a.w_q is not None)
+    assert 1 <= diff <= 4  # one byte per weight_bit fault (collisions ok)
+
+
+def test_single_weight_bit_flip_is_one_byte(gate):
+    g, _ = gate
+    qm = g.quantized
+    target = next(ql for ql in qm.layers if ql.w_q is not None)
+    plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, target.info.name,
+                                index=7, bit=6),))
+    qm_f = F.inject(qm, plan)
+    w0 = np.array(target.w_q).reshape(-1)
+    w1 = np.array(next(ql for ql in qm_f.layers
+                       if ql.info.name == target.info.name).w_q).reshape(-1)
+    changed = np.nonzero(w0 != w1)[0]
+    assert list(changed) == [7]
+    assert (int(w0[7]) ^ int(w1[7])) & 0xFF == 1 << 6
+
+
+def test_unknown_stage_rejected(gate):
+    g, _ = gate
+    plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, "no_such_stage"),))
+    with pytest.raises(KeyError, match="no_such_stage"):
+        F.inject(g.quantized, plan)
+
+
+def test_activation_fault_changes_output(gate):
+    g, x = gate
+    qm = g.quantized
+    xj = jnp.asarray(x)
+    clean = np.asarray(pipe.make_executor(qm, interpret=True)(xj))
+    plan = F.FaultPlan.sample(qm, 3, kinds=(F.ACTIVATION_BIT,), seed=5)
+    payload = plan.activation_faults()
+    assert payload  # at least one tensor targeted
+    ex_f = pipe.make_executor(qm, interpret=True, faults=payload)
+    faulty = np.asarray(ex_f(xj))
+    assert not np.array_equal(clean, faulty)
+
+
+def test_fault_hooks_off_keep_jaxpr_identical(gate):
+    """``faults=None`` / ``faults={}`` / ``audit=False`` must trace the
+    exact same program as the pre-existing executor — the hooks are
+    trace-time-only."""
+    g, x = gate
+    qm = g.quantized
+    xj = jnp.asarray(x)
+    base = str(jax.make_jaxpr(
+        lambda v: pipe.make_executor(qm, interpret=True)(v))(xj))
+    off = str(jax.make_jaxpr(
+        lambda v: pipe.make_executor(qm, interpret=True, audit=False,
+                                     faults=None)(v))(xj))
+    empty = str(jax.make_jaxpr(
+        lambda v: pipe.make_executor(qm, interpret=True, faults={})(v))(xj))
+    assert base == off == empty

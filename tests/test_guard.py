@@ -1,0 +1,116 @@
+"""Guarded execution: passthrough jaxpr identity, detection of injected
+upsets, and bit-exact recovery through the degradation ladder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import pipeline as pipe
+from repro.core.guard import GuardPolicy
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+
+RNG = np.random.default_rng(29)
+
+#: Zero-slack policy: the audit flags ANY deviation from the calibration
+#: run — deterministic when the guarded input is the calibration input.
+STRICT = GuardPolicy(margin=0.0, sat_tol=0.0)
+
+
+@pytest.fixture(scope="module")
+def gate():
+    g = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
+    x = (RNG.standard_normal((1, 3, 32, 32)) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x)
+    return g, x
+
+
+def test_guards_off_is_jaxpr_identical_passthrough(gate):
+    g, x = gate
+    xj = jnp.asarray(x)
+    plain = g.build("emulation")
+    guarded_off = g.build_guarded(policy=None)
+    a = str(jax.make_jaxpr(lambda v: plain(v))(xj))
+    b = str(jax.make_jaxpr(lambda v: guarded_off(v))(xj))
+    assert a == b
+    np.testing.assert_array_equal(np.asarray(plain(xj)),
+                                  np.asarray(guarded_off(xj)))
+
+
+def test_clean_run_passes_audit(gate):
+    g, x = gate
+    gx = g.build_guarded(x_cal=x, policy=STRICT)
+    y, report = gx(jnp.asarray(x))
+    assert report.ok and not report.detected and not report.degraded
+    assert report.actions == [] and report.recovered_by is None
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(g.build("emulation")(jnp.asarray(x))))
+
+
+def test_weight_flip_detected_and_recovered_bit_exact(gate):
+    """Acceptance: flip one high bit of a staged conv weight; the guard
+    must flag the run, escalate past reexecute (the corruption is
+    persistent), and serve the unfused fallback — bit-exact against the
+    clean program."""
+    g, x = gate
+    xj = jnp.asarray(x)
+    clean = np.asarray(g.build("emulation")(xj))
+    first_conv = next(ql.info.name for ql in g.quantized.layers
+                      if ql.w_q is not None)
+    plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, first_conv,
+                                index=0, bit=6),))
+    qm_f = F.inject(g.quantized, plan)
+    gx = g.build_guarded(x_cal=x, policy=STRICT, qm=qm_f)
+    y, report = gx(xj)
+    assert report.detected and first_conv in report.flagged
+    assert report.actions[0].action == "reexecute"
+    assert report.actions[0].flagged  # persistent: reexecute re-flags
+    assert report.recovered_by == "unfused" and report.degraded
+    assert report.ok
+    np.testing.assert_array_equal(np.asarray(y), clean)
+
+
+def test_activation_fault_detected(gate):
+    g, x = gate
+    plan = F.FaultPlan.sample(g.quantized, 4, kinds=(F.ACTIVATION_BIT,),
+                              seed=9, bits=(6, 7))
+    gx = g.build_guarded(x_cal=x, policy=STRICT,
+                         faults=plan.activation_faults())
+    y, report = gx(jnp.asarray(x))
+    assert report.detected
+    assert report.ok  # ladder found a clean program
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(g.build("emulation")(jnp.asarray(x))))
+
+
+def test_per_tensor_rung_serves_degraded_output():
+    """With the unfused rung disabled, a per-channel program must fall
+    through to the per-tensor rung and report degraded service."""
+    g = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
+    x = (RNG.standard_normal((1, 3, 32, 32)) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x, per_channel=True)
+    first_conv = next(ql.info.name for ql in g.quantized.layers
+                      if ql.w_q is not None)
+    plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, first_conv,
+                                index=0, bit=6),))
+    qm_f = F.inject(g.quantized, plan)
+    policy = GuardPolicy(margin=0.0, sat_tol=0.0, fallback_unfused=False)
+    gx = g.build_guarded(x_cal=x, policy=policy, qm=qm_f)
+    y, report = gx(jnp.asarray(x))
+    assert report.detected
+    assert report.recovered_by == "per_tensor" and report.degraded
+    assert report.ok
+
+
+def test_with_program_shares_calibration(gate):
+    """The bench's re-deployment hook: a new program under the same
+    envelope, no recalibration."""
+    g, x = gate
+    gx = g.build_guarded(x_cal=x, policy=STRICT)
+    plan = F.FaultPlan.sample(g.quantized, 2, kinds=(F.WEIGHT_BIT,),
+                              seed=1, bits=(5, 6, 7))
+    gx2 = gx.with_program(F.inject(g.quantized, plan))
+    assert gx2._gold is gx._gold
+    _, report = gx2(jnp.asarray(x))
+    assert report.detected

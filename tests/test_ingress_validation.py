@@ -1,0 +1,88 @@
+"""Ingress validation: imported models with poisoned weights or broken
+structure are rejected with a structured GraphValidationError."""
+import numpy as np
+import pytest
+
+from repro.core import onnx_lite
+from repro.core.graph import (Graph, GraphValidationError, Node,
+                              TensorInfo)
+from repro.core.parser import parse, validate_ingress
+from repro.models import cnn
+
+
+def _poisoned_graph():
+    g = cnn.tiny_cnn()
+    w_name = next(n.inputs[1] for n in g.nodes if n.op_type == "Conv")
+    g.initializers[w_name] = g.initializers[w_name].copy()
+    g.initializers[w_name].reshape(-1)[3] = np.nan
+    return g, w_name
+
+
+def test_parse_rejects_nan_weight():
+    g, w_name = _poisoned_graph()
+    with pytest.raises(GraphValidationError) as ei:
+        parse(g)
+    assert ei.value.reason == "non-finite initializer"
+    assert ei.value.tensor == w_name
+    assert "1 NaN/Inf" in str(ei.value)
+
+
+def test_validation_error_is_a_value_error():
+    g, _ = _poisoned_graph()
+    with pytest.raises(ValueError):
+        parse(g)
+
+
+def test_from_model_dict_rejects_nan_initializer():
+    g = cnn.tiny_cnn()
+    model = onnx_lite.to_model_dict(g)
+    inits = dict(g.initializers)
+    name = next(iter(inits))
+    inits[name] = np.full_like(inits[name], np.inf)
+    with pytest.raises(GraphValidationError) as ei:
+        onnx_lite.from_model_dict(model, inits)
+    assert ei.value.tensor == name
+
+
+def test_from_model_dict_rejects_malformed_container():
+    with pytest.raises(GraphValidationError, match="malformed"):
+        onnx_lite.from_model_dict({"nodes": "nope", "inputs": [],
+                                   "outputs": []})
+    with pytest.raises(GraphValidationError, match="malformed"):
+        onnx_lite.from_model_dict({"inputs": [], "outputs": []})
+
+
+def test_from_model_dict_rejects_dangling_edge():
+    model = {
+        "nodes": [{"op_type": "Relu", "name": "r",
+                   "inputs": ["ghost"], "outputs": ["y"]}],
+        "inputs": [{"name": "x", "shape": [1, 3, 4, 4]}],
+        "outputs": ["y"],
+    }
+    with pytest.raises(GraphValidationError) as ei:
+        onnx_lite.from_model_dict(model, {})
+    assert ei.value.reason == "invalid graph structure"
+    assert "ghost" in str(ei.value)
+
+
+def test_parse_rejects_dynamic_weight_operand():
+    """A Conv whose weight arrives as a graph input (not an
+    initializer) cannot be staged into on-chip memory."""
+    nodes = [Node("Conv", "c", ["x", "w_dyn"], ["y"],
+                  {"kernel_shape": (3, 3), "pads": (1, 1, 1, 1)})]
+    g = Graph("dynw", nodes,
+              inputs=[TensorInfo("x", (1, 3, 8, 8)),
+                      TensorInfo("w_dyn", (4, 3, 3, 3))],
+              outputs=["y"])
+    with pytest.raises(GraphValidationError) as ei:
+        validate_ingress(g)
+    assert ei.value.reason == "weight operand is not an initializer"
+    assert ei.value.node == "c" and ei.value.tensor == "w_dyn"
+
+
+def test_clean_model_round_trips(tmp_path):
+    g = cnn.tiny_cnn()
+    path = str(tmp_path / "model")
+    onnx_lite.save(g, path)
+    g2 = onnx_lite.load(path)
+    parse(g2)  # no exception: validation passes on healthy ingress

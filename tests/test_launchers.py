@@ -75,3 +75,32 @@ def test_serving_deterministic_outputs():
                             "--cache-len", "32", "--seed", "7"])
         outs.append(buf.getvalue().split("served")[1].split(" in")[0])
     assert outs[0] == outs[1]
+
+
+def test_serving_sheds_load_past_queue_bound(capsys):
+    """Admission control: submissions past --max-queue are rejected
+    (marked done, counted) instead of growing the queue without limit;
+    the admitted requests still complete."""
+    rc = serve_mod.main(["--arch", "qwen2-1.5b", "--preset", "smoke",
+                         "--slots", "1", "--requests", "6",
+                         "--max-queue", "2",
+                         "--prompt-len", "4", "--max-new", "4",
+                         "--cache-len", "32"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "served 6 requests" in out
+    assert "rejected=4" in out
+
+
+def test_serving_drops_expired_requests(capsys):
+    """A zero deadline expires every queued request at admission time;
+    the engine drains without serving a single token."""
+    rc = serve_mod.main(["--arch", "qwen2-1.5b", "--preset", "smoke",
+                         "--slots", "2", "--requests", "4",
+                         "--deadline-s", "0",
+                         "--prompt-len", "4", "--max-new", "4",
+                         "--cache-len", "32"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "served 4 requests, 0 tokens" in out
+    assert "expired=4" in out

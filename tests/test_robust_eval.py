@@ -1,0 +1,108 @@
+"""RobustEvaluator: timeout, retry, quarantine, and journal resume over
+a deliberately hostile design space."""
+import os
+import time
+
+import pytest
+
+from repro.core import dse
+from repro.core.resources import ResourceReport
+
+
+def _report(pct: float) -> ResourceReport:
+    return ResourceReport(
+        percents={k: pct for k in ("lut", "dsp", "mem", "reg")},
+        raw={"pct": pct}, fits=pct <= 100.0)
+
+
+class FlakySpace(dse.DesignSpace):
+    """Four candidates: one healthy, one that always raises, one that
+    hangs past any reasonable timeout, one that fails twice then
+    succeeds (and is the best option, so retry matters)."""
+
+    HANG_S = 30.0
+
+    def __init__(self):
+        self.calls = {"good": 0, "raises": 0, "hangs": 0, "flaky": 0}
+
+    def options(self):
+        return [("good",), ("raises",), ("hangs",), ("flaky",)]
+
+    def axes(self):
+        return [["good", "raises", "hangs", "flaky"]]
+
+    def evaluate(self, option):
+        (name,) = option
+        self.calls[name] += 1
+        if name == "raises":
+            raise RuntimeError("compiler segfault")
+        if name == "hangs":
+            time.sleep(self.HANG_S)
+            return _report(10.0)
+        if name == "flaky":
+            if self.calls[name] <= 2:
+                raise OSError("license server flake")
+            return _report(80.0)   # best fitting candidate
+        return _report(50.0)
+
+
+def _evaluator(space, journal):
+    return dse.RobustEvaluator(space, timeout_s=0.3, retries=2,
+                               backoff_s=0.01, journal_path=journal)
+
+
+def test_sweep_completes_quarantines_and_retries(tmp_path):
+    journal = str(tmp_path / "sweep.json")
+    space = FlakySpace()
+    t0 = time.perf_counter()
+    res = dse.brute_force(_evaluator(space, journal))
+    wall = time.perf_counter() - t0
+    # the hang cost one timeout budget, not HANG_S
+    assert wall < FlakySpace.HANG_S / 2
+    assert res.found and res.best == ("flaky",)   # retry won
+    assert res.f_max == pytest.approx(80.0)
+    assert space.calls == {"good": 1, "raises": 3, "hangs": 1, "flaky": 3}
+
+
+def test_quarantine_reasons_and_stats(tmp_path):
+    journal = str(tmp_path / "sweep.json")
+    space = FlakySpace()
+    robust = _evaluator(space, journal)
+    dse.brute_force(robust)
+    quarantined = dict((tuple(o), why)
+                       for o, why in robust.quarantined_options())
+    assert set(quarantined) == {("raises",), ("hangs",)}
+    assert "RuntimeError" in quarantined[("raises",)]
+    assert "EvalTimeout" in quarantined[("hangs",)]
+    assert robust.stats["quarantined"] == 2
+    assert robust.stats["timeouts"] == 1
+    assert robust.stats["retries"] >= 2
+    assert robust.stats["evaluated"] == 2      # good + flaky
+    # quarantined candidates score as unfittable, never as exceptions
+    rep = robust.evaluate(("raises",))
+    assert not rep.fits and rep.percents["lut"] == dse.FAILED_PCT
+
+
+def test_journal_resume_skips_all_work(tmp_path):
+    journal = str(tmp_path / "sweep.json")
+    dse.brute_force(_evaluator(FlakySpace(), journal))
+    assert os.path.exists(journal)
+    # fresh evaluator over a fresh space: everything replays from disk
+    space2 = FlakySpace()
+    robust2 = _evaluator(space2, journal)
+    res2 = dse.brute_force(robust2)
+    assert space2.calls == {"good": 0, "raises": 0, "hangs": 0, "flaky": 0}
+    assert res2.found and res2.best == ("flaky",)
+    assert res2.f_max == pytest.approx(80.0)
+    assert robust2.stats["journal_hits"] == 4
+    assert robust2.stats["evaluated"] == 0
+
+
+def test_rl_dse_survives_hostile_space(tmp_path):
+    space = FlakySpace()
+    robust = _evaluator(space, str(tmp_path / "rl.json"))
+    res = dse.rl_dse(robust, episodes=3, steps_per_episode=6, seed=0)
+    # quarantined candidates read as over-quota (-1 reward), the agent
+    # keeps exploring, and each option compiled at most once + retries
+    assert space.calls["hangs"] <= 1
+    assert res.steps == 18
