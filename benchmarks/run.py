@@ -7,13 +7,14 @@ import argparse
 import sys
 import traceback
 
-from . import (faults_bench, fig6_breakdown, kernels_bench,
-               perf_iterations, pipeline_bench, resnet_bench,
-               roofline_table, table1_latency, table2_dse, table3_alexnet,
-               table4_vgg)
+from . import (faults_bench, fig6_breakdown, inception_bench,
+               kernels_bench, perf_iterations, pipeline_bench,
+               resnet_bench, roofline_table, table1_latency, table2_dse,
+               table3_alexnet, table4_vgg)
 
 SUITES = {
     "faults": faults_bench,
+    "inception": inception_bench,
     "table1": table1_latency,
     "table2": table2_dse,
     "table3": table3_alexnet,

@@ -20,8 +20,8 @@ Degradation ladder (in order; each rung audits its own output):
      repeat); a persistent fault (corrupted staged weight) re-flags
      and escalates.
   2. ``fallback:unfused``   — rebuild from the golden graph + specs
-     with ``fuse_skip=False`` (the bit-exact standalone-merge program
-     that always exists) and re-run.  This is the FPGA
+     with ``fuse_skip=False, fuse_concat=False`` (the bit-exact
+     standalone-merge program that always exists) and re-run.  This is the FPGA
      reconfigure-from-flash move: the corrupted staged image is
      abandoned for a freshly staged one on the fallback datapath.
   3. ``fallback:per_tensor`` — additionally degrade per-channel weight
@@ -202,7 +202,8 @@ class GuardedExecutor:
 
     def _fallback(self, name: str) -> Optional[_Level]:
         if name not in self._fallbacks:
-            parsed_u = P.parse(self.gate.parsed.graph, fuse_skip=False)
+            parsed_u = P.parse(self.gate.parsed.graph, fuse_skip=False,
+                               fuse_concat=False)
             if name == "unfused":
                 specs = dict(self.gate.specs)
             else:  # per_tensor (implies unfused: the simplest datapath)

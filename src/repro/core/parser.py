@@ -81,6 +81,18 @@ class LayerInfo:
     merge: Optional["LayerInfo"] = dataclasses.field(default=None,
                                                      repr=False)
     skip_input: Optional[str] = None
+    # concat-epilogue fusion: a conv whose ``concat`` field references a
+    # channel-merge stage writes its output directly into channels
+    # ``[concat_offset, concat_offset + c_out)`` of the merge's shared
+    # buffer (the concat becomes an output BlockSpec, not a copy).  The
+    # Concat stage itself STAYS in the schedule, annotated
+    # ``concat_fused`` — it keeps its name, operand tensors, relu flag
+    # and (possibly absorbed) pool for quantization threading, and the
+    # executor turns it into a buffer hand-off instead of a concatenate.
+    concat: Optional["LayerInfo"] = dataclasses.field(default=None,
+                                                      repr=False)
+    concat_offset: int = 0
+    concat_fused: bool = False
     # linked structure (paper: "saves layers in a linked structure")
     prev: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
     next: Optional["LayerInfo"] = dataclasses.field(default=None, repr=False)
@@ -103,6 +115,14 @@ class LayerInfo:
     def is_depthwise(self) -> bool:
         return self.kind == CONV and self.group > 1 and \
             self.group == self.c_in and self.c_out == self.c_in
+
+    @property
+    def is_dw_kernel(self) -> bool:
+        """Runs on the depthwise band kernel: group == Cin with an
+        integer channel multiplier (Cout = m·Cin, one filter column per
+        group).  Multiplier 1 is classic depthwise."""
+        return self.kind == CONV and self.group > 1 and \
+            self.group == self.c_in and self.c_out % self.c_in == 0
 
     @property
     def c_in(self) -> int:
@@ -231,7 +251,8 @@ def _pow2(x: int) -> bool:
     return x > 0 and (x & (x - 1)) == 0
 
 
-def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
+def parse(graph: Graph, fuse_skip: bool = True,
+          fuse_concat: bool = True) -> ParsedModel:
     """Traverse the graph (already topologically ordered) and emit the
     scheduled DAG stage program.
 
@@ -241,12 +262,19 @@ def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
     survives as a named stage output.  Unfused data-movement nodes
     become aliases; stage inputs are canonicalised through them so the
     executor's tensor environment only ever holds stage outputs.
+    Because canonicalisation runs on *every* stage's inputs, a merge
+    whose operand arrives through elided Flatten/Identity/Dropout nodes
+    sees the real producer tensor — fusion eligibility is judged on the
+    resolved name, not the alias.
 
     With ``fuse_skip`` (default) a post-pass folds every eligible
     residual ``Add`` into the conv stage producing one of its operands
     (see :func:`_fold_skip_adds`) — the paper's keep-it-on-chip rule
     applied to skip connections.  ``fuse_skip=False`` keeps every merge
-    a standalone stage (the bit-exact two-stage fallback program)."""
+    a standalone stage (the bit-exact two-stage fallback program).
+    ``fuse_concat`` (default) likewise annotates every eligible channel
+    ``Concat`` for producer-epilogue fusion (see :func:`_fold_concats`);
+    ``fuse_concat=False`` keeps every concat a standalone copy."""
     validate_ingress(graph)
     layers: List[LayerInfo] = []
     consumed: set = set()
@@ -290,6 +318,8 @@ def parse(graph: Graph, fuse_skip: bool = True) -> ParsedModel:
 
     if fuse_skip:
         layers = _fold_skip_adds(layers, canon(graph.outputs[0]))
+    if fuse_concat:
+        layers = _fold_concats(layers, canon(graph.outputs[0]))
 
     # link the list in schedule order (the paper's order-preserving
     # structure; with branches this is the topological schedule)
@@ -485,8 +515,10 @@ def _fold_skip_adds(layers: List[LayerInfo],
     Eligibility — everything else falls back to the standalone merge
     stage, whose numerics the fused epilogue replicates bit-for-bit:
 
-      * the host operand's producer is a *dense* conv (``group == 1``;
-        depthwise/ragged grouped producers run on other kernels);
+      * the host operand's producer is a dense conv (``group == 1``) or
+        a depthwise-kernel conv (group == Cin, any integer channel
+        multiplier — both band kernels carry the skip epilogue; ragged
+        grouped producers run on the group-axis kernel, which does not);
       * that conv's output has the Add as its **only** consumer (pipe
         semantics — a fan-out tensor must stay addressable);
       * the conv has no fused pool yet and matches the Add's geometry;
@@ -518,7 +550,8 @@ def _fold_skip_adds(layers: List[LayerInfo],
             cands = []
             for k, t in enumerate(add.inputs):
                 p = producer.get(t)
-                if (p is not None and p.kind == CONV and p.group == 1
+                if (p is not None and p.kind == CONV
+                        and (p.group == 1 or p.is_dw_kernel)
                         and p.pool is None and p.merge is None
                         and not p.softmax
                         and n_consumers.get(t, 0) == 1
@@ -557,6 +590,97 @@ def _fold_skip_adds(layers: List[LayerInfo],
     return result
 
 
+def _fold_concats(layers: List[LayerInfo],
+                  graph_output: Optional[str] = None) -> List[LayerInfo]:
+    """Concat-epilogue fusion pass (the ROADMAP's inception item): mark
+    each channel ``Concat`` whose operands are ALL produced by eligible
+    band-kernel convs so that every producer writes its Cout tiles
+    directly into a channel-offset slice of the shared merge buffer —
+    the concat becomes an output BlockSpec, not a copy (one full merged
+    feature-map HBM write + read saved per inception block).
+
+    Unlike ``_fold_skip_adds`` the Concat stage is NOT removed: it stays
+    scheduled (annotated ``concat_fused``) as the point where the shared
+    buffer becomes the merge tensor, keeping its name, operand tensors
+    and relu flag — so ``thread_scales``/``calibrate_quantization``
+    treat fused and unfused programs identically and emit byte-identical
+    specs.  Producers get ``concat``/``concat_offset`` annotations; the
+    offsets accumulate in operand order and exactly partition the merge
+    Cout.
+
+    Eligibility — ALL operands must qualify, else the whole concat stays
+    a standalone merge (whose numerics the fused epilogue replicates
+    bit-for-bit):
+
+      * the merge is a channel concat (axis 1 in NCHW), not the graph
+        output's softmax host, with no repeated operand tensors;
+      * every operand's producer is a dense conv (``group == 1``) or a
+        depthwise-kernel conv (group == Cin, integer channel
+        multiplier) with no fused pool, no folded residual merge, no
+        prior concat annotation and no softmax;
+      * every operand has the concat as its **only** consumer and is not
+        the graph output (a fan-out operand must stay addressable);
+      * every operand matches the merge's batch and spatial geometry
+        (the channel sums are checked to partition the merge Cout).
+
+    After folding, a single-consumer unpadded MaxPool stage straddling
+    the concat output is absorbed as the merge's fused pool — each
+    producer then runs the pool in its epilogue on its own channel
+    slice (disjoint channels, so pooling per-slice == pooling the
+    merged tensor) and the shared buffer takes the pooled geometry."""
+    result = list(layers)
+    producer = {li.output: li for li in result}
+    n_consumers: Dict[str, int] = {}
+    for li in result:
+        for t in li.inputs:
+            n_consumers[t] = n_consumers.get(t, 0) + 1
+    for cc in [l for l in result if l.kind == CONCAT]:
+        if cc.axis != 1 or cc.softmax:
+            continue
+        if len(set(cc.inputs)) != len(cc.inputs):
+            continue  # a repeated operand would need two buffer slices
+        prods: List[Tuple[LayerInfo, int]] = []
+        off = 0
+        ok = True
+        for t in cc.inputs:
+            p = producer.get(t)
+            if (p is None or p.kind != CONV
+                    or not (p.group == 1 or p.is_dw_kernel)
+                    or p.pool is not None or p.merge is not None
+                    or p.concat is not None or p.softmax
+                    or n_consumers.get(t, 0) != 1
+                    or t == graph_output
+                    or p.out_shape[0] != cc.out_shape[0]
+                    or p.out_shape[2:] != cc.out_shape[2:]):
+                ok = False
+                break
+            prods.append((p, off))
+            off += p.c_out
+        if not ok or off != cc.c_out:
+            continue
+        for p, o in prods:
+            p.concat = cc
+            p.concat_offset = o
+        cc.concat_fused = True
+        # absorb a following single-consumer unpadded MaxPool into the
+        # merge: producers pool in their epilogues, the shared buffer
+        # is allocated in pooled geometry, and the standalone pool
+        # stage disappears (graph order Concat→ReLU→MaxPool == epilogue
+        # order concat-align→relu→pool)
+        pools = [l for l in result if cc.output in l.inputs]
+        if (len(pools) == 1 and pools[0].kind == POOL
+                and pools[0].pool_type == "max"
+                and not any(pools[0].pads)
+                and not pools[0].softmax and not pools[0].relu
+                and cc.output != graph_output):
+            pstage = pools[0]
+            cc.pool = pstage
+            cc.output = pstage.output
+            cc.out_shape = pstage.out_shape
+            result.remove(pstage)
+    return result
+
+
 def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, Any]]:
     """The host-program memory access schedule of §4.2: for each pipeline
     stage, how many (N_i)-wide vectors the memory-read kernel fetches and
@@ -579,7 +703,19 @@ def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, An
             )
         elif li.kind in (ADD, CONCAT):
             # merge stages stream every operand once and write the
-            # merged tensor — pure memory traffic, no weight vectors
+            # merged tensor — pure memory traffic, no weight vectors.
+            # The operand slices of a concat together hold exactly one
+            # merged tensor's worth of elements, so the merge buffer is
+            # charged ONCE per merge tensor, not once per branch.  A
+            # producer-fused concat is a buffer hand-off: the producers
+            # already wrote their slices in place, so the stage itself
+            # moves nothing.
+            if li.concat_fused:
+                sched.append(
+                    dict(layer=li.name, kind=li.kind, read_vectors=0,
+                         weight_vectors=0, lanes=min(n_l, li.c_out),
+                         write_elems=0))
+                continue
             if li.kind == ADD:
                 read_elems = len(li.inputs) * int(np.prod(li.in_shape))
             else:
@@ -603,6 +739,13 @@ def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, An
                 # fused residual merge: the skip operand streams through
                 # the same memory-read kernel once (conv-out geometry)
                 read_vectors += -(-int(np.prod(li.conv_out_shape)) // n_i)
+            write_elems = int(np.prod(li.out_shape))
+            if li.concat is not None and li.concat.pool is not None:
+                # concat producer running the merge's absorbed pool in
+                # its epilogue: it writes its slice in pooled geometry
+                cc = li.concat
+                write_elems = int(cc.out_shape[0] * li.c_out
+                                  * np.prod(cc.out_shape[2:]))
             sched.append(
                 dict(
                     layer=li.name,
@@ -610,7 +753,7 @@ def memory_schedule(model: ParsedModel, n_i: int, n_l: int) -> List[Dict[str, An
                     read_vectors=read_vectors,
                     weight_vectors=c_out * vec_per_patch,
                     lanes=min(n_l, c_out),
-                    write_elems=int(np.prod(li.out_shape)),
+                    write_elems=write_elems,
                 )
             )
     return sched

@@ -329,6 +329,19 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     exists in the jitted program, so the merged feature map never
     round-trips through HBM between conv and add.
 
+    Conv stages annotated for concat fusion (``li.concat``) write their
+    output into a channel-offset slice of the merge's shared buffer: the
+    buffer is allocated once at the first producer (tracked in the
+    environment under a reserved ``"\\x00cbuf:"`` key so it can never
+    collide with a graph tensor name), each producer's kernel call
+    aliases it in and out with its own ``out_off``/``concat_shift``/
+    ``concat_relu`` (and the merge's absorbed pool, when present), and
+    the annotated Concat stage itself just *unwraps* the finished buffer
+    as the merge tensor — no ``concatenate`` appears anywhere in the
+    jitted program.  Liveness is exact: the buffer key is released at
+    the Concat stage, which by construction runs after the last
+    contributor.
+
     Buffer release is liveness-based: the stage index of each tensor's
     last consumer is precomputed, and the environment drops a tensor as
     soon as the schedule passes it — the program's peak live set (what
@@ -355,6 +368,14 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
             last_use[t] = idx
     last_use[out_name] = len(stages)  # the egress reads it
 
+    # concat fusion: producers need their merge's alignment shifts and
+    # relu flag, which live on the (still-scheduled) Concat stage
+    concat_ql = {ql.info.name: ql for ql in stages
+                 if ql.info.kind == P.CONCAT}
+
+    def _cbuf_key(cc: P.LayerInfo) -> str:
+        return "\x00cbuf:" + cc.name
+
     def forward(x_float: jnp.ndarray) -> jnp.ndarray:
         scale = 2.0 ** qm.input_m
         h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
@@ -377,12 +398,54 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                         skip_shifts=ql.operand_shifts,
                         merge_shift=ql.merge_spec.requant_shift,
                         merge_relu=li.merge.relu)
+                if li.concat is not None:  # concat merge in the epilogue
+                    cc = li.concat
+                    cq = concat_ql[cc.name]
+                    if cc.pool is not None:  # pool absorbed by the merge
+                        pool = (cc.pool.kernel_shape[0], cc.pool.strides[0])
+                    key = _cbuf_key(cc)
+                    buf = env.get(key)
+                    if buf is None:  # first contributor allocates
+                        _nb, c_, h_, w_ = cc.out_shape
+                        # batch comes from the traced activation, not
+                        # the parse-time shape: the closure must lower
+                        # at any batch (fullflow compiles a sample)
+                        nb = env[li.inputs[0]].shape[0]
+                        buf = jnp.zeros((nb, h_, w_, c_), jnp.int8)
+                    merge_kw.update(
+                        out_buf=buf,
+                        out_off=li.concat_offset,
+                        concat_shift=cq.operand_shifts[
+                            cc.inputs.index(li.output)],
+                        concat_relu=cc.relu)
                 h = ops.qconv2d_nhwc(
                     env[li.inputs[0]], ql.w_q, ql.b_q,
                     strides=li.strides, pads=li.pads,
                     shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
                     groups=li.group, block_cout=block_cout, block_h=block_h,
                     block_cin=block_cin, interpret=interpret, **merge_kw)
+                if li.concat is not None:
+                    # h IS the shared buffer; the producer's own output
+                    # tensor exists only as a channel slice of it.
+                    # Faults/audit addressing that tensor act on the
+                    # slice (written back via a dynamic update), so the
+                    # resilience layer sees fused and standalone
+                    # programs the same way.
+                    if (faults and li.output in faults) or audit:
+                        off = li.concat_offset
+                        sl = jax.lax.slice_in_dim(h, off, off + li.c_out,
+                                                  axis=3)
+                        if faults and li.output in faults:
+                            sl = _apply_tensor_faults(sl, faults[li.output])
+                            h = jax.lax.dynamic_update_slice_in_dim(
+                                h, sl, off, axis=3)
+                        if audit:
+                            stats[li.output] = _stage_stats(sl)
+                    env[_cbuf_key(li.concat)] = h
+                    for t in li.inputs:  # liveness still applies
+                        if last_use.get(t) == idx:
+                            env.pop(t, None)
+                    continue
             elif li.kind == P.POOL:
                 pool_fn = (ops.avgpool2d_nhwc if li.pool_type == "avg"
                            else ops.maxpool2d_nhwc)
@@ -405,10 +468,17 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                                   shift=ql.spec.requant_shift,
                                   relu=li.relu)
             elif li.kind == P.CONCAT:
-                xs = [env[t] for t in li.inputs]
-                h = ops.qconcat_nhwc(xs, ql.operand_shifts,
-                                     axis=_concat_axis(li.axis, xs[0].ndim),
-                                     relu=li.relu)
+                if li.concat_fused:
+                    # the producers already wrote (aligned + relu'd +
+                    # pooled) channel slices in place: the shared buffer
+                    # IS the merge tensor — just unwrap and release it
+                    h = env.pop(_cbuf_key(li))
+                else:
+                    xs = [env[t] for t in li.inputs]
+                    h = ops.qconcat_nhwc(
+                        xs, ql.operand_shifts,
+                        axis=_concat_axis(li.axis, xs[0].ndim),
+                        relu=li.relu)
             else:  # pragma: no cover - parser only emits the five kinds
                 raise ValueError(li.kind)
             if faults and li.output in faults:
@@ -452,6 +522,12 @@ def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
     latency model and the memory-schedule report.  Merge stages read
     every operand."""
     if li.kind in (P.ADD, P.CONCAT):
+        if li.concat_fused:
+            # producer-fused concat: the producers wrote their channel
+            # slices straight into the shared buffer, so the merge
+            # stage itself moves NOTHING (no operand reads, no merged
+            # write) — the whole round trip the fusion saves
+            return 0, 0, 0
         if li.kind == P.ADD:
             in_b = len(li.inputs) * int(np.prod(li.in_shape))
         else:
@@ -464,4 +540,10 @@ def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
         in_b += int(np.prod(li.conv_out_shape))
     w_b = li.weight_count()
     out_b = int(np.prod(li.out_shape))
+    if li.kind == P.CONV and li.concat is not None \
+            and li.concat.pool is not None:
+        # concat producer with the merge's absorbed pool: the slice it
+        # writes is in pooled geometry
+        cc = li.concat
+        out_b = int(cc.out_shape[0] * li.c_out * np.prod(cc.out_shape[2:]))
     return in_b, w_b, out_b

@@ -132,14 +132,23 @@ def conv_band_working_set(layers, n_l: int,
 
       * dense convs with a fused residual merge — the conv band plus
         the ``skip_vmem_bytes`` band the epilogue holds alongside it;
-      * depthwise convs — the channel-tiled band of ``dw_vmem_bytes``
-        (the input band shrinks with the channel tile, like the dense
-        kernel's ``block_cin`` slice);
-      * ragged grouped convs — the reference path's whole-plane set
-        (no banding: x plane + weights + int32 accumulator + output);
-      * residual/concat merges — every operand band plus the int32
-        alignment intermediate and the output band (the skip buffer the
-        paper would hold in block RAM while the main branch computes).
+      * depthwise convs (any integer channel multiplier) — the
+        channel-tiled band of ``dw_vmem_bytes`` (the input band shrinks
+        with the channel tile, like the dense kernel's ``block_cin``
+        slice, and with the multiplier), plus a fused residual band;
+      * ragged grouped convs — the per-group band of
+        ``gconv_vmem_bytes`` (the group axis is a grid axis, so the
+        per-step set never scales with the group count);
+      * residual merges — every operand band plus the int32 alignment
+        intermediate and the output band (the skip buffer the paper
+        would hold in block RAM while the main branch computes);
+      * standalone concat merges — ONE output band plus the int32
+        alignment intermediate and the int8 output: the operand slices
+        partition the merge band, so charging every operand on top of
+        the output would double-count the same bytes per branch;
+      * fused concat merges (``concat_fused``) — zero: each producer
+        conv writes its channel slice of the merge buffer from its own
+        epilogue, so the charge already sits in the producers' bands.
 
     ``per_channel`` charges the per-lane requant-shift row (one int32
     per Cout lane of the tile, next to the bias row) every per-channel
@@ -154,7 +163,11 @@ def conv_band_working_set(layers, n_l: int,
     peak = 0
     for li in layers:
         if li.kind in ("add", "concat"):
-            n_ops = len(li.inputs)
+            if li.concat_fused:
+                continue  # producers write the merge buffer in place
+            # concat operand slices partition the output band: charge
+            # the merge once, not once per producer branch
+            n_ops = 1 if li.kind == "concat" else len(li.inputs)
             if len(li.out_shape) == 4:  # spatial merge: row-banded
                 _n, c, h, w = li.out_shape
                 bh = min(block_h or h, h)
@@ -175,15 +188,18 @@ def conv_band_working_set(layers, n_l: int,
         pool = None
         if li.pool is not None:
             pool = (li.pool.kernel_shape[0], li.pool.strides[0])
-        if li.is_depthwise:
+        if li.is_dw_kernel:
             bc = min(block_cout, -(-cout // 128) * 128)
             ws = qconv.dw_vmem_bytes(wp, cout, kh, kw, bc, oh, ow,
                                      sh=sh, sw=sw, block_h=block_h,
-                                     pool=pool, per_channel=per_channel)
-        elif li.group > 1:  # ragged grouped conv: unbanded reference path
-            ws = (hp * wp * cin + li.weight_count()
-                  + 4 * oh * ow * cout + oh * ow * cout
-                  + qconv.shift_vec_bytes(cout, per_channel))
+                                     pool=pool, per_channel=per_channel,
+                                     multiplier=cout // cin,
+                                     skip=li.merge is not None)
+        elif li.group > 1:  # ragged grouped conv: per-group band
+            ws = qconv.gconv_vmem_bytes(
+                wp, cin // li.group, cout // li.group, kh, kw, oh, ow,
+                sh=sh, sw=sw, block_h=block_h, pool=pool,
+                per_channel=per_channel)
         else:
             bco = min(block_cout, -(-cout // 128) * 128)
             ws = qconv.vmem_bytes(

@@ -39,11 +39,14 @@ class CNNDesignSpace(DesignSpace):
     rejected exactly like any over-quota option in Algorithm 1.  The
     working-set rule covers the whole DAG stage program — dense convs
     (Cin-sliced by the ``8*N_i`` contraction tile, plus the skip band
-    when a residual add is fused into the epilogue), depthwise and
-    ragged grouped convs, and residual/concat merge buffers
-    (resources.py) — so branchy models prune the same way linear ones
-    do, and both parallelism degrees shape the scored band exactly as
-    they shape the executor's kernel tiles.
+    when a residual add is fused into the epilogue), depthwise convs at
+    any channel multiplier, ragged grouped convs (banded per group, so
+    the group count never inflates the per-step set), residual merge
+    buffers, and concats (charged once per merge tensor when standalone,
+    zero when epilogue-fused: the producers' own bands already hold the
+    in-place slices — resources.py) — so branchy models prune the same
+    way linear ones do, and both parallelism degrees shape the scored
+    band exactly as they shape the executor's kernel tiles.
     """
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,

@@ -77,10 +77,14 @@ class CNN2Gate:
 
     # ---------------------------------------------------------- front end
     @classmethod
-    def from_graph(cls, graph: Graph, fuse_skip: bool = True) -> "CNN2Gate":
+    def from_graph(cls, graph: Graph, fuse_skip: bool = True,
+                   fuse_concat: bool = True) -> "CNN2Gate":
         """``fuse_skip=False`` keeps residual adds as standalone merge
-        stages — the bit-exact fallback/benchmark baseline program."""
-        return cls(P.parse(graph, fuse_skip=fuse_skip))
+        stages and ``fuse_concat=False`` keeps channel concats as
+        standalone copies — the bit-exact fallback/benchmark baseline
+        programs."""
+        return cls(P.parse(graph, fuse_skip=fuse_skip,
+                           fuse_concat=fuse_concat))
 
     @classmethod
     def from_file(cls, path: str) -> "CNN2Gate":

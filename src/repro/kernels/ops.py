@@ -64,6 +64,10 @@ def qconv2d_nhwc(
     skip_shifts: Tuple[int, int] = (0, 0),
     merge_shift: int = 0,
     merge_relu: bool = False,
+    out_buf: Optional[jnp.ndarray] = None,
+    out_off: int = 0,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """TPU-layout entry point for the fused conv+ReLU+pool row-band
@@ -71,18 +75,20 @@ def qconv2d_nhwc(
 
     Dispatch on ``groups`` (ONNX Conv semantics):
       * 1 — dense row-band MXU kernel (:func:`qconv.qconv2d`);
-      * Cin with multiplier 1 — depthwise row-band VPU kernel
-        (:func:`qconv.qdwconv2d`);
-      * anything else (ragged groups) — the exact jnp reference path
-        (:func:`ref.qconv2d_ref`), bit-identical semantics, no banding.
+      * Cin with integer channel multiplier (Cout = m·Cin, 1×1 filter
+        slice) — depthwise row-band VPU kernel (:func:`qconv.qdwconv2d`);
+      * anything else (ragged groups) — the grouped row-band kernel
+        (:func:`qconv.qgconv2d`), one group per grid step.
 
     ``shift`` is an int (per-tensor requant) or a length-Cout tuple
     (per-output-channel weight scales: the band epilogue applies a
     per-lane shift vector — every dispatch target supports it).
     ``block_cin`` tiles the dense kernel's Cin contraction (the DSE's
-    ``N_i`` axis); ``skip`` fuses a residual add into the epilogue
-    (dense kernel only — the parser never folds merges onto depthwise
-    or ragged grouped producers)."""
+    ``N_i`` axis); ``skip`` fuses a residual add into the epilogue and
+    ``out_buf``/``out_off``/``concat_shift``/``concat_relu`` write the
+    result into a channel slice of a shared concat merge buffer (dense
+    and depthwise kernels — the parser never folds merges onto ragged
+    grouped producers)."""
     interpret = default_interpret() if interpret is None else interpret
     cin = x.shape[-1]
     cout = w.shape[-1]
@@ -95,16 +101,28 @@ def qconv2d_nhwc(
                               block_h=block_h, block_cin=block_cin,
                               skip=skip, skip_shifts=skip_shifts,
                               merge_shift=merge_shift, merge_relu=merge_relu,
+                              out_buf=out_buf, out_off=out_off,
+                              concat_shift=concat_shift,
+                              concat_relu=concat_relu,
                               interpret=interpret)
-    assert skip is None, "skip fusion requires the dense band kernel"
-    if groups == cin and cout == cin and w.shape[2] == 1:
+    if groups == cin and cout % cin == 0 and w.shape[2] == 1:
         return _qconv.qdwconv2d(x, w.reshape(w.shape[0], w.shape[1], cout),
                                 b, strides=strides, shift=shift, relu=relu,
                                 pool=pool, block_c=block_cout,
-                                block_h=block_h, interpret=interpret)
-    # ragged grouped conv: reference path (exact fixed-point semantics)
-    return ref.qconv2d_ref(x, w, b, strides, shift, relu, pool,
-                           groups=groups)
+                                block_h=block_h,
+                                skip=skip, skip_shifts=skip_shifts,
+                                merge_shift=merge_shift,
+                                merge_relu=merge_relu,
+                                out_buf=out_buf, out_off=out_off,
+                                concat_shift=concat_shift,
+                                concat_relu=concat_relu,
+                                interpret=interpret)
+    # ragged grouped conv: banded Pallas path, group on its own grid axis
+    assert skip is None and out_buf is None, \
+        "merge fusion requires the dense or depthwise band kernel"
+    return _qconv.qgconv2d(x, w, b, groups=groups, strides=strides,
+                           shift=shift, relu=relu, pool=pool,
+                           block_h=block_h, interpret=interpret)
 
 
 def qadd_nhwc(xs, align_shifts, *, shift: int = 0,
@@ -121,17 +139,10 @@ def qconcat_nhwc(xs, align_shifts, *, axis: int = -1,
     """Channel-merge stage: align each int8 operand to the common scale,
     then concatenate (values are unchanged by concat, so there is no
     output requant beyond the per-operand alignment).  ``relu`` applies
-    a fused post-merge ReLU (relu∘concat == concat∘relu per operand)."""
-    aligned = [
-        jnp.clip(ref.align_shift(x.astype(jnp.int32), s),
-                 ref.INT8_MIN, ref.INT8_MAX).astype(jnp.int8)
-        if s else x
-        for x, s in zip(xs, align_shifts)
-    ]
-    y = jnp.concatenate(aligned, axis=axis)
-    if relu:
-        y = jnp.maximum(y, 0)
-    return y
+    a fused post-merge ReLU (relu∘concat == concat∘relu per operand).
+    Delegates to :func:`ref.qconcat_ref` — ONE definition of the merge
+    semantics, shared with the producer-epilogue concat fusion."""
+    return ref.qconcat_ref(xs, align_shifts, axis=axis, relu=relu)
 
 
 def maxpool2d_nhwc(x: jnp.ndarray, window: int, stride: int,

@@ -46,6 +46,21 @@ the conv result is requantized and *clipped to int8* first (exactly
 the tensor the standalone conv stage would have produced), then both
 operands are alignment-shifted in int32, added, and requantized to
 the merge output scale — see ``_band_epilogue``.
+
+Concat-epilogue output (inception-class merges, DESIGN.md §10): with
+``out_buf`` the kernel writes its Cout tiles directly into a
+channel-offset slice ``[out_off, out_off + Cout)`` of a shared merge
+buffer instead of materializing its own tensor — the channel ``Concat``
+of a GoogLeNet/SqueezeNet branch merge becomes an *output BlockSpec*,
+not a copy.  The buffer rides ``input_output_aliases`` (unwritten
+channels pass through untouched) and every output-side BlockSpec uses
+unblocked element offsets with **clamped** index maps
+(``min(i*tile, size-tile)``): a ragged final row band or Cout tile
+re-computes its overlap with the previous tile — identical values, so
+the revisit is benign — instead of writing padding into neighbouring
+branches' channels.  The per-operand concat alignment shift and the
+merge's fused ReLU run inside the epilogue (monotone per-element maps,
+so they commute exactly with the fused max-pool that still runs last).
 """
 from __future__ import annotations
 
@@ -82,6 +97,8 @@ def _band_epilogue(
     skip_shifts: Tuple[int, int] = (0, 0),
     merge_shift: int = 0,
     merge_relu: bool = False,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
 ):
     """Shared bias/requant/ReLU/max-pool tail of both band kernels —
     identical fixed-point semantics for dense and depthwise convs.
@@ -97,7 +114,15 @@ def _band_epilogue(
     then conv result and skip are alignment-shifted to the merge's
     common fixed-point position in int32, added, and requantized with
     ``merge_shift``/``merge_relu``.  A fused max-pool always runs last
-    (post-merge), matching the graph order Conv→Add→(ReLU)→MaxPool."""
+    (post-merge), matching the graph order Conv→Add→(ReLU)→MaxPool.
+
+    With ``concat_shift``/``concat_relu`` the tail additionally applies
+    this operand's channel-``Concat`` alignment — exactly
+    ``ops.qconcat_nhwc``'s per-operand ``clip(round_shift(x, s))`` (a
+    zero shift is the identity on values already clipped to int8 range,
+    so it is skipped) and the merge's fused ReLU — before the pool.
+    Both maps are monotone and per-element, so running them pre-pool is
+    bit-identical to pooling the concatenated tensor."""
     ho, wo = conv_hw
     bco = acc.shape[-1]
     acc = acc + b_row.astype(jnp.int32)          # (1,bco) broadcasts
@@ -113,6 +138,10 @@ def _band_epilogue(
         if merge_relu:
             acc = jnp.maximum(acc, 0)
         acc = jnp.clip(acc, INT8_MIN, INT8_MAX)
+    if concat_shift:
+        acc = jnp.clip(_round_shift(acc, concat_shift), INT8_MIN, INT8_MAX)
+    if concat_relu:
+        acc = jnp.maximum(acc, 0)
     y = acc.astype(jnp.int8).reshape(ho, wo, bco)
 
     if pool is not None:
@@ -137,7 +166,9 @@ def _qconv_band_kernel(
     w_ref,    # (KH, KW, bci, bco) int8
     b_ref,    # (1, bco) int32
     *rest,    # [shift_ref (1, bco) int32,]
-              # [skip_ref (1, conv_rows, Wo, bco) int8,] o_ref, acc_ref
+              # [skip_ref (1, conv_rows, Wo, bco) int8,]
+              # [buf_ref (aliased merge buffer, write-only via o_ref),]
+              # o_ref, acc_ref
     strides: Tuple[int, int],
     conv_hw: Tuple[int, int],   # conv rows/cols produced by this band
     cin_steps: int,
@@ -149,10 +180,15 @@ def _qconv_band_kernel(
     skip_shifts: Tuple[int, int],
     merge_shift: int,
     merge_relu: bool,
+    has_out_buf: bool = False,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
 ):
     rest = list(rest)
     shift_ref = rest.pop(0) if has_shift_vec else None
     skip_ref = rest.pop(0) if has_skip else None
+    if has_out_buf:
+        rest.pop(0)   # aliased merge buffer: never read in-kernel
     o_ref, acc_ref = rest
     x = x_ref[0]                      # (band_in_rows, Wp, bci)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
@@ -185,7 +221,9 @@ def _qconv_band_kernel(
                                   s, relu, pool, skip=skip,
                                   skip_shifts=skip_shifts,
                                   merge_shift=merge_shift,
-                                  merge_relu=merge_relu)
+                                  merge_relu=merge_relu,
+                                  concat_shift=concat_shift,
+                                  concat_relu=concat_relu)
 
     if cin_steps == 1:
         # whole-Cin contraction: straight-line, no per-step conditionals
@@ -200,16 +238,27 @@ def _qconv_band_kernel(
 
 
 def _qdwconv_band_kernel(
-    x_ref,    # (1, band_in_rows, Wp, bc) int8 — halo band, channel tile
-    w_ref,    # (KH, KW, bc) int8 — one filter tap per channel
+    x_ref,    # (1, band_in_rows, Wp, bc // multiplier) int8 — halo band
+    w_ref,    # (KH, KW, bc) int8 — one filter tap per output channel
     b_ref,    # (1, bc) int32
-    *rest,    # [shift_ref (1, bc) int32,] o_ref, acc_ref
+    *rest,    # [shift_ref (1, bc) int32,]
+              # [skip_ref (1, conv_rows, Wo, bc) int8,]
+              # [buf_ref (aliased merge buffer, write-only via o_ref),]
+              # o_ref, acc_ref
     strides: Tuple[int, int],
     conv_hw: Tuple[int, int],
     has_shift_vec: bool,
+    has_skip: bool,
+    multiplier: int,
     shift: int,
     relu: bool,
     pool: Optional[Tuple[int, int]],
+    skip_shifts: Tuple[int, int],
+    merge_shift: int,
+    merge_relu: bool,
+    has_out_buf: bool = False,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
 ):
     """Depthwise variant of the row-band kernel: each output channel is
     its own group, so the "per-group Cout tile" degenerates to a channel
@@ -218,11 +267,24 @@ def _qdwconv_band_kernel(
     reduction to feed the MXU).  Per-channel requant rides a
     ``(1, bc)`` int32 shift row exactly as in the dense kernel — the
     channel tile IS the lane dim, so depthwise layers (the biggest
-    per-channel accuracy winners) pay one row per tile."""
+    per-channel accuracy winners) pay one row per tile.
+
+    With a channel ``multiplier`` m > 1 (ONNX group=Cin, Cout=m·Cin)
+    the input tile holds ``bc // m`` channels and each feeds the m
+    adjacent output lanes — ``jnp.repeat`` on the lane axis reproduces
+    ONNX's group→output-channel order (output channel c convolves input
+    channel c // m).  The channel tile is always a multiple of m, so
+    every tile maps to a whole input-channel slice.  The residual-skip
+    and concat-merge epilogues are identical to the dense kernel's."""
     rest = list(rest)
     shift_ref = rest.pop(0) if has_shift_vec else None
+    skip_ref = rest.pop(0) if has_skip else None
+    if has_out_buf:
+        rest.pop(0)   # aliased merge buffer: never read in-kernel
     o_ref, acc_ref = rest
-    x = x_ref[0]                      # (band_in_rows, Wp, bc)
+    x = x_ref[0]                      # (band_in_rows, Wp, bc // m)
+    if multiplier > 1:
+        x = jnp.repeat(x, multiplier, axis=-1)
     kh, kw = w_ref.shape[0], w_ref.shape[1]
     bc = o_ref.shape[-1]
     ho, wo = conv_hw
@@ -240,9 +302,16 @@ def _qdwconv_band_kernel(
             acc_ref[...] += (patch.reshape(ho * wo, bc).astype(jnp.int32)
                              * w_ref[i, j].astype(jnp.int32))
 
+    skip = (skip_ref[0].reshape(ho * wo, -1)
+            if skip_ref is not None else None)
     s = shift_ref[...] if shift_ref is not None else shift
     o_ref[0] = _band_epilogue(acc_ref[...], b_ref[...], conv_hw,
-                              s, relu, pool)
+                              s, relu, pool, skip=skip,
+                              skip_shifts=skip_shifts,
+                              merge_shift=merge_shift,
+                              merge_relu=merge_relu,
+                              concat_shift=concat_shift,
+                              concat_relu=concat_relu)
 
 
 def band_geometry(block_h: int, kh: int, sh: int,
@@ -280,11 +349,146 @@ def default_block_h(oh: int, wo: int) -> int:
     return min(oh, target_rows, 32)
 
 
+def _qconv2d_into(
+    x, w, b, out_buf, *,
+    strides, shift, relu, pool, block_cout, block_h, block_cin,
+    skip, skip_shifts, merge_shift, merge_relu,
+    out_off, concat_shift, concat_relu, interpret,
+):
+    """Concat-epilogue variant of the dense band call: writes the conv's
+    Cout tiles into channels ``[out_off, out_off + Cout)`` of the shared
+    merge buffer ``out_buf`` and returns the whole (aliased) buffer.
+
+    The buffer has the *exact* merge geometry — no Cout or row padding
+    is allowed to leak into it — so output-side tiles use **clamped**
+    unblocked index maps (``min(i*tile, size-tile)``): a ragged final
+    tile re-computes part of its predecessor's rows/channels with
+    identical values instead of writing padding.  Unwritten channels
+    (the other producers' slices) pass through untouched via
+    ``input_output_aliases``."""
+    n, hp, wp, cin = x.shape
+    kh, kw, _cin2, cout = w.shape
+    sh, sw = strides
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    if b is None:
+        b = jnp.zeros((cout,), jnp.int32)
+    per_channel = isinstance(shift, tuple)
+    if per_channel:
+        assert len(shift) == cout, (len(shift), cout)
+
+    if pool is not None:
+        pwin, pstr = pool
+        oh, ow = (ho - pwin) // pstr + 1, (wo - pwin) // pstr + 1
+    else:
+        oh, ow = ho, wo
+    ps = pool[1] if pool is not None else 1
+    nb, ohb, owb, c_tot = out_buf.shape
+    assert (nb, ohb, owb) == (n, oh, ow), (out_buf.shape, (n, oh, ow))
+    assert out_off + cout <= c_tot, (out_off, cout, c_tot)
+
+    bco = min(block_cout, cout)
+    n_co = -(-cout // bco)
+
+    bci = min(block_cin or cin, cin)
+    cinp = _rup(cin, bci)
+    cin_steps = cinp // bci
+    if cinp > cin:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cinp - cin)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, cinp - cin), (0, 0)))
+
+    bh = min(block_h or default_block_h(oh, wo), oh)
+    conv_rows, band_in_rows, _in_step = band_geometry(bh, kh, sh, pool)
+    n_bands = -(-oh // bh)
+    rows_needed = (oh - bh) * ps * sh + band_in_rows
+    if rows_needed > hp:
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
+
+    def ostart(hi):          # clamped band start (final-output rows)
+        return jnp.minimum(hi * bh, oh - bh)
+
+    def cstart(co):          # clamped Cout-tile start
+        return jnp.minimum(co * bco, cout - bco)
+
+    brow = b.reshape(1, cout)
+    in_specs = [
+        pl.BlockSpec((1, band_in_rows, wp, bci),
+                     lambda ni, hi, co, ci: (ni, ostart(hi) * ps * sh, 0,
+                                             ci * bci),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((kh, kw, bci, bco),
+                     lambda ni, hi, co, ci: (0, 0, ci * bci, cstart(co)),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((1, bco), lambda ni, hi, co, ci: (0, cstart(co)),
+                     indexing_mode=pl.unblocked),
+    ]
+    operands = [x, w, brow]
+    if per_channel:
+        svec = jnp.asarray(shift, jnp.int32).reshape(1, cout)
+        in_specs.append(
+            pl.BlockSpec((1, bco), lambda ni, hi, co, ci: (0, cstart(co)),
+                         indexing_mode=pl.unblocked))
+        operands.append(svec)
+    if skip is not None:
+        assert skip.shape == (n, ho, wo, cout), (skip.shape,
+                                                 (n, ho, wo, cout))
+        skip_rows = (oh - bh) * ps + conv_rows
+        if skip_rows > ho:
+            skip = jnp.pad(skip, ((0, 0), (0, skip_rows - ho),
+                                  (0, 0), (0, 0)))
+        in_specs.append(
+            pl.BlockSpec((1, conv_rows, wo, bco),
+                         lambda ni, hi, co, ci: (ni, ostart(hi) * ps, 0,
+                                                 cstart(co)),
+                         indexing_mode=pl.unblocked))
+        operands.append(skip)
+
+    out_spec = pl.BlockSpec(
+        (1, bh, ow, bco),
+        lambda ni, hi, co, ci: (ni, ostart(hi), 0, out_off + cstart(co)),
+        indexing_mode=pl.unblocked)
+    in_specs.append(out_spec)        # aliased merge buffer (same tiles)
+    operands.append(out_buf)
+
+    return pl.pallas_call(
+        functools.partial(
+            _qconv_band_kernel,
+            strides=strides,
+            conv_hw=(conv_rows, wo),
+            cin_steps=cin_steps,
+            has_shift_vec=per_channel,
+            has_skip=skip is not None,
+            has_out_buf=True,
+            shift=0 if per_channel else shift,
+            relu=relu,
+            pool=pool,
+            skip_shifts=skip_shifts,
+            merge_shift=merge_shift,
+            merge_relu=merge_relu,
+            concat_shift=concat_shift,
+            concat_relu=concat_relu,
+        ),
+        grid=(n, n_bands, n_co, cin_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_buf.shape, jnp.int8),
+        scratch_shapes=[pltpu.VMEM((conv_rows * wo, bco), jnp.int32)],
+        input_output_aliases={len(operands) - 1: 0},
+        compiler_params=pltpu.TPUCompilerParams(
+            # ragged tiles revisit rows/channels (same values), so the
+            # band and Cout axes are not parallel-safe here
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("strides", "shift", "relu", "pool", "block_cout",
                      "block_h", "block_cin", "skip_shifts", "merge_shift",
-                     "merge_relu", "interpret"),
+                     "merge_relu", "out_off", "concat_shift", "concat_relu",
+                     "interpret"),
 )
 def qconv2d(
     x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
@@ -302,6 +506,10 @@ def qconv2d(
     skip_shifts: Tuple[int, int] = (0, 0),
     merge_shift: int = 0,
     merge_relu: bool = False,
+    out_buf: Optional[jnp.ndarray] = None,  # shared concat merge buffer
+    out_off: int = 0,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Row-banded fused int8 conv.  ``block_cin=None`` contracts the
@@ -315,7 +523,21 @@ def qconv2d(
     per-Cout-block BlockSpec (the bias row's twin) and the epilogue
     applies a per-lane round-half-up shift vector.  A scalar ``shift``
     compiles the exact pre-existing per-tensor kernel (no extra
-    operand, same jaxpr)."""
+    operand, same jaxpr).
+
+    ``out_buf`` selects the concat-epilogue path (``_qconv2d_into``):
+    the result lands in channels ``[out_off, out_off + Cout)`` of the
+    shared merge buffer — after this operand's ``concat_shift``
+    alignment and the merge's ``concat_relu`` — and the *whole buffer*
+    is returned instead of a standalone tensor."""
+    if out_buf is not None:
+        return _qconv2d_into(
+            x, w, b, out_buf, strides=strides, shift=shift, relu=relu,
+            pool=pool, block_cout=block_cout, block_h=block_h,
+            block_cin=block_cin, skip=skip, skip_shifts=skip_shifts,
+            merge_shift=merge_shift, merge_relu=merge_relu,
+            out_off=out_off, concat_shift=concat_shift,
+            concat_relu=concat_relu, interpret=interpret)
     n, hp, wp, cin = x.shape
     kh, kw, cin2, cout = w.shape
     assert cin == cin2, (x.shape, w.shape)
@@ -426,46 +648,268 @@ def qconv2d(
 @functools.partial(
     jax.jit,
     static_argnames=("strides", "shift", "relu", "pool", "block_c",
-                     "block_h", "interpret"),
+                     "block_h", "skip_shifts", "merge_shift", "merge_relu",
+                     "out_off", "concat_shift", "concat_relu", "interpret"),
 )
 def qdwconv2d(
-    x: jnp.ndarray,  # (N, Hp, Wp, C) int8, pre-padded (VALID conv)
-    w: jnp.ndarray,  # (KH, KW, C) int8 — one 2-D filter per channel
-    b: Optional[jnp.ndarray],  # (C,) int32
+    x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
+    w: jnp.ndarray,  # (KH, KW, Cout) int8 — one 2-D filter per out channel
+    b: Optional[jnp.ndarray],  # (Cout,) int32
     *,
     strides: Tuple[int, int] = (1, 1),
-    shift=0,         # int | length-C tuple (per-channel shift vector)
+    shift=0,         # int | length-Cout tuple (per-channel shift vector)
     relu: bool = True,
     pool: Optional[Tuple[int, int]] = None,
     block_c: int = 128,
     block_h: Optional[int] = None,
+    skip: Optional[jnp.ndarray] = None,  # (N, Ho, Wo, Cout) int8 residual
+    skip_shifts: Tuple[int, int] = (0, 0),
+    merge_shift: int = 0,
+    merge_relu: bool = False,
+    out_buf: Optional[jnp.ndarray] = None,  # shared concat merge buffer
+    out_off: int = 0,
+    concat_shift: int = 0,
+    concat_relu: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Depthwise (group == C, multiplier 1) row-banded int8 conv with the
-    same fused ReLU/requant/max-pool tail as :func:`qconv2d`.  Grid is
-    ``(batch, H/block_h, C/block_c)`` — the channel tile is the
-    per-group Cout tile with one channel per group.  ``shift`` as a
-    length-C tuple stages the per-channel shift row, as in
-    :func:`qconv2d`."""
-    n, hp, wp, c = x.shape
-    kh, kw, c2 = w.shape
-    assert c == c2, (x.shape, w.shape)
+    """Depthwise (group == Cin, Cout = m·Cin for integer channel
+    multiplier m ≥ 1) row-banded int8 conv with the same fused
+    ReLU/requant/max-pool/skip/concat tail as :func:`qconv2d`.  Grid is
+    ``(batch, H/block_h, Cout/block_c)`` — the channel tile is the
+    per-group Cout tile; with m > 1 each tile reads the matching
+    ``block_c / m`` input channels (the tile is kept a multiple of m).
+    ``shift`` as a length-Cout tuple stages the per-channel shift row,
+    ``skip`` fuses a residual add, and ``out_buf``/``out_off`` write the
+    result into a channel-offset slice of a shared concat merge buffer,
+    all exactly as in :func:`qconv2d`."""
+    n, hp, wp, c_in = x.shape
+    kh, kw, cout = w.shape
+    assert cout % c_in == 0, (x.shape, w.shape)
+    m = cout // c_in
     sh, sw = strides
     ho = (hp - kh) // sh + 1
     wo = (wp - kw) // sw + 1
     if b is None:
-        b = jnp.zeros((c,), jnp.int32)
+        b = jnp.zeros((cout,), jnp.int32)
 
     per_channel = isinstance(shift, tuple)
     if per_channel:
-        assert len(shift) == c, (len(shift), c)
+        assert len(shift) == cout, (len(shift), cout)
 
-    bc = min(block_c, _rup(c, 128))
-    cp = _rup(c, bc)
-    if cp > c:  # zero channels: zero weights/bias keep them inert
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
-    wpad = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c)))
-    bpad = jnp.pad(b, (0, cp - c)).reshape(1, cp)
+    if pool is not None:
+        pwin, pstr = pool
+        oh, ow = (ho - pwin) // pstr + 1, (wo - pwin) // pstr + 1
+    else:
+        oh, ow = ho, wo
+    ps = pool[1] if pool is not None else 1
+
+    bh = min(block_h or default_block_h(oh, wo), oh)
+    conv_rows, band_in_rows, in_step = band_geometry(bh, kh, sh, pool)
+    n_bands = -(-oh // bh)
+    conv_step = bh * ps
+
+    if out_buf is not None:
+        # Concat-epilogue path: exact merge geometry, clamped tiles
+        # (see _qconv2d_into for the revisit-consistency argument).
+        nb, ohb, owb, c_tot = out_buf.shape
+        assert (nb, ohb, owb) == (n, oh, ow), (out_buf.shape, (n, oh, ow))
+        assert out_off + cout <= c_tot, (out_off, cout, c_tot)
+        bc = min(block_c, cout)
+        bc = max(bc - bc % m, m)     # whole input channels per tile
+        n_c = -(-cout // bc)
+        rows_needed = (oh - bh) * ps * sh + band_in_rows
+        if rows_needed > hp:
+            x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
+
+        def ostart(hi):
+            return jnp.minimum(hi * bh, oh - bh)
+
+        def cstart(ci):
+            # m | bc and m | cout, so the clamped start stays a whole
+            # input-channel boundary
+            return jnp.minimum(ci * bc, cout - bc)
+
+        brow = b.reshape(1, cout)
+        in_specs = [
+            pl.BlockSpec((1, band_in_rows, wp, bc // m),
+                         lambda ni, hi, ci: (ni, ostart(hi) * ps * sh, 0,
+                                             cstart(ci) // m),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((kh, kw, bc),
+                         lambda ni, hi, ci: (0, 0, cstart(ci)),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, cstart(ci)),
+                         indexing_mode=pl.unblocked),
+        ]
+        operands = [x, w, brow]
+        if per_channel:
+            svec = jnp.asarray(shift, jnp.int32).reshape(1, cout)
+            in_specs.append(
+                pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, cstart(ci)),
+                             indexing_mode=pl.unblocked))
+            operands.append(svec)
+        if skip is not None:
+            assert skip.shape == (n, ho, wo, cout), (skip.shape,
+                                                     (n, ho, wo, cout))
+            skip_rows = (oh - bh) * ps + conv_rows
+            if skip_rows > ho:
+                skip = jnp.pad(skip, ((0, 0), (0, skip_rows - ho),
+                                      (0, 0), (0, 0)))
+            in_specs.append(
+                pl.BlockSpec((1, conv_rows, wo, bc),
+                             lambda ni, hi, ci: (ni, ostart(hi) * ps, 0,
+                                                 cstart(ci)),
+                             indexing_mode=pl.unblocked))
+            operands.append(skip)
+        out_spec = pl.BlockSpec(
+            (1, bh, ow, bc),
+            lambda ni, hi, ci: (ni, ostart(hi), 0, out_off + cstart(ci)),
+            indexing_mode=pl.unblocked)
+        in_specs.append(out_spec)
+        operands.append(out_buf)
+        return pl.pallas_call(
+            functools.partial(
+                _qdwconv_band_kernel,
+                strides=strides,
+                conv_hw=(conv_rows, wo),
+                has_shift_vec=per_channel,
+                has_skip=skip is not None,
+                has_out_buf=True,
+                multiplier=m,
+                shift=0 if per_channel else shift,
+                relu=relu,
+                pool=pool,
+                skip_shifts=skip_shifts,
+                merge_shift=merge_shift,
+                merge_relu=merge_relu,
+                concat_shift=concat_shift,
+                concat_relu=concat_relu,
+            ),
+            grid=(n, n_bands, n_c),
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(out_buf.shape, jnp.int8),
+            scratch_shapes=[pltpu.VMEM((conv_rows * wo, bc), jnp.int32)],
+            input_output_aliases={len(operands) - 1: 0},
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(*operands)
+
+    bc = min(block_c, _rup(cout, 128))
+    bc = max(bc - bc % m, m)         # whole input channels per tile
+    cp = _rup(cout, bc)              # m | bc  =>  m | cp
+    if cp > cout:  # zero channels: zero weights/bias keep them inert
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp // m - c_in)))
+    wpad = jnp.pad(w, ((0, 0), (0, 0), (0, cp - cout)))
+    bpad = jnp.pad(b, (0, cp - cout)).reshape(1, cp)
+
+    ohp = n_bands * bh
+    rows_needed = (n_bands - 1) * in_step + band_in_rows
+    if rows_needed > hp:
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
+
+    in_specs = [
+        # Halo band, channel-tiled: unblocked element offsets (rows
+        # overlap between bands; channels advance by whole tiles).
+        pl.BlockSpec((1, band_in_rows, wp, bc // m),
+                     lambda ni, hi, ci: (ni, hi * in_step, 0,
+                                         ci * (bc // m)),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((kh, kw, bc), lambda ni, hi, ci: (0, 0, ci)),
+        pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)),
+    ]
+    operands = [x, wpad, bpad]
+    if per_channel:
+        svec = jnp.pad(jnp.asarray(shift, jnp.int32),
+                       (0, cp - cout)).reshape(1, cp)
+        in_specs.append(pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)))
+        operands.append(svec)
+    if skip is not None:
+        assert skip.shape == (n, ho, wo, cout), (skip.shape,
+                                                 (n, ho, wo, cout))
+        # Conv-row band of the residual operand (see qconv2d): bands of
+        # conv rows overlap when a pool is fused, so unblocked rows
+        # stepping by the conv row stride; channels pad to the tile grid.
+        skip_rows = (n_bands - 1) * conv_step + conv_rows
+        skip = jnp.pad(skip, ((0, 0), (0, max(0, skip_rows - ho)),
+                              (0, 0), (0, cp - cout)))
+        in_specs.append(
+            pl.BlockSpec((1, conv_rows, wo, bc),
+                         lambda ni, hi, ci: (ni, hi * conv_step, 0,
+                                             ci * bc),
+                         indexing_mode=pl.unblocked))
+        operands.append(skip)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _qdwconv_band_kernel,
+            strides=strides,
+            conv_hw=(conv_rows, wo),
+            has_shift_vec=per_channel,
+            has_skip=skip is not None,
+            multiplier=m,
+            shift=0 if per_channel else shift,
+            relu=relu,
+            pool=pool,
+            skip_shifts=skip_shifts,
+            merge_shift=merge_shift,
+            merge_relu=merge_relu,
+        ),
+        grid=(n, n_bands, cp // bc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bh, ow, bc),
+                               lambda ni, hi, ci: (ni, hi, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, ohp, ow, cp), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((conv_rows * wo, bc), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :oh, :, :cout]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("groups", "strides", "shift", "relu", "pool",
+                     "block_h", "interpret"),
+)
+def qgconv2d(
+    x: jnp.ndarray,  # (N, Hp, Wp, Cin) int8, pre-padded (VALID conv)
+    w: jnp.ndarray,  # (KH, KW, Cin/groups, Cout) int8
+    b: Optional[jnp.ndarray],  # (Cout,) int32
+    *,
+    groups: int,
+    strides: Tuple[int, int] = (1, 1),
+    shift=0,         # int | length-Cout tuple (per-channel shift vector)
+    relu: bool = True,
+    pool: Optional[Tuple[int, int]] = None,
+    block_h: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Ragged grouped conv (1 < groups < Cin, or any group count the
+    dense/depthwise kernels don't cover): row-banded Pallas path that
+    puts the *group* on its own grid axis.  Grid is
+    ``(batch, H/block_h, groups)``; each step contracts one group's
+    ``Cin/groups`` input slice against its ``Cout/groups`` filter tile —
+    the dense band kernel body with a single Cin step, so the group
+    tile rides the MXU exactly like a dense Cout tile.  Groups are
+    disjoint in both input and output channels (blocked channel specs;
+    no halo on the channel axis)."""
+    n, hp, wp, cin = x.shape
+    kh, kw, cin_g, cout = w.shape
+    assert cin == cin_g * groups, (x.shape, w.shape, groups)
+    assert cout % groups == 0, (cout, groups)
+    cout_g = cout // groups
+    sh, sw = strides
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    if b is None:
+        b = jnp.zeros((cout,), jnp.int32)
+
+    per_channel = isinstance(shift, tuple)
+    if per_channel:
+        assert len(shift) == cout, (len(shift), cout)
 
     if pool is not None:
         pwin, pstr = pool
@@ -481,43 +925,49 @@ def qdwconv2d(
     if rows_needed > hp:
         x = jnp.pad(x, ((0, 0), (0, rows_needed - hp), (0, 0), (0, 0)))
 
+    brow = b.reshape(1, cout)
     in_specs = [
-        # Halo band, channel-tiled: unblocked element offsets (rows
-        # overlap between bands; channels advance by whole tiles).
-        pl.BlockSpec((1, band_in_rows, wp, bc),
-                     lambda ni, hi, ci: (ni, hi * in_step, 0, ci * bc),
+        # Halo band restricted to one group's input-channel slice.
+        pl.BlockSpec((1, band_in_rows, wp, cin_g),
+                     lambda ni, hi, gi: (ni, hi * in_step, 0, gi * cin_g),
                      indexing_mode=pl.unblocked),
-        pl.BlockSpec((kh, kw, bc), lambda ni, hi, ci: (0, 0, ci)),
-        pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)),
+        pl.BlockSpec((kh, kw, cin_g, cout_g),
+                     lambda ni, hi, gi: (0, 0, 0, gi)),
+        pl.BlockSpec((1, cout_g), lambda ni, hi, gi: (0, gi)),
     ]
-    operands = [x, wpad, bpad]
+    operands = [x, w, brow]
     if per_channel:
-        svec = jnp.pad(jnp.asarray(shift, jnp.int32),
-                       (0, cp - c)).reshape(1, cp)
-        in_specs.append(pl.BlockSpec((1, bc), lambda ni, hi, ci: (0, ci)))
+        svec = jnp.asarray(shift, jnp.int32).reshape(1, cout)
+        in_specs.append(
+            pl.BlockSpec((1, cout_g), lambda ni, hi, gi: (0, gi)))
         operands.append(svec)
 
     out = pl.pallas_call(
         functools.partial(
-            _qdwconv_band_kernel,
+            _qconv_band_kernel,
             strides=strides,
             conv_hw=(conv_rows, wo),
+            cin_steps=1,
             has_shift_vec=per_channel,
+            has_skip=False,
             shift=0 if per_channel else shift,
             relu=relu,
             pool=pool,
+            skip_shifts=(0, 0),
+            merge_shift=0,
+            merge_relu=False,
         ),
-        grid=(n, n_bands, cp // bc),
+        grid=(n, n_bands, groups),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bh, ow, bc),
-                               lambda ni, hi, ci: (ni, hi, 0, ci)),
-        out_shape=jax.ShapeDtypeStruct((n, ohp, ow, cp), jnp.int8),
-        scratch_shapes=[pltpu.VMEM((conv_rows * wo, bc), jnp.int32)],
+        out_specs=pl.BlockSpec((1, bh, ow, cout_g),
+                               lambda ni, hi, gi: (ni, hi, 0, gi)),
+        out_shape=jax.ShapeDtypeStruct((n, ohp, ow, cout), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((conv_rows * wo, cout_g), jnp.int32)],
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*operands)
-    return out[:, :oh, :, :c]
+    return out[:, :oh, :, :]
 
 
 def band_input_bytes(hp: int, wp: int, cin: int, kh: int, ho: int, *,
@@ -587,20 +1037,50 @@ def dw_vmem_bytes(wp: int, c: int, kh: int, kw: int, bc: int,
                   sw: Optional[int] = None,
                   block_h: Optional[int] = None,
                   pool: Optional[Tuple[int, int]] = None,
-                  per_channel: bool = False) -> int:
+                  per_channel: bool = False,
+                  multiplier: int = 1,
+                  skip: bool = False) -> int:
     """Per-grid-step working set of the depthwise row-band kernel.  The
     input band is channel-tiled (unlike the dense kernel, which must see
     every Cin for the contraction), so ``bc`` bounds every term
-    (including the per-channel shift row in per-channel mode)."""
+    (including the per-channel shift row in per-channel mode).  ``c`` is
+    the *output* channel count; with a channel ``multiplier`` m > 1 the
+    input band carries only ``bc / m`` channels (each feeds m output
+    lanes in-register), and ``skip`` adds the fused residual band in
+    conv-output geometry, as in :func:`vmem_bytes`."""
     bh = min(block_h or ho, ho)
     conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
     conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
     bc = min(bc, c)
-    return (band_in_rows * wp * bc           # x band int8 (channel tile)
+    bc_in = -(-bc // multiplier)
+    return (band_in_rows * wp * bc_in        # x band int8 (channel tile)
             + kh * kw * bc                   # per-channel taps int8
             + 4 * conv_rows * conv_wo * bc   # acc scratch int32
             + bh * wo * bc                   # y band int8
+            + skip_vmem_bytes(conv_rows, conv_wo, bc, skip)
             + shift_vec_bytes(bc, per_channel))
+
+
+def gconv_vmem_bytes(wp: int, cin_g: int, cout_g: int, kh: int, kw: int,
+                     ho: int, wo: int, *,
+                     sh: int = 1,
+                     sw: Optional[int] = None,
+                     block_h: Optional[int] = None,
+                     pool: Optional[Tuple[int, int]] = None,
+                     per_channel: bool = False) -> int:
+    """Per-grid-step working set of the ragged grouped-conv band kernel
+    (:func:`qgconv2d`): one group's input-channel slice of the halo
+    band, its filter tile, the int32 accumulator, and the group's
+    output band — the group axis is a grid axis, so per-step VMEM never
+    scales with the group count."""
+    bh = min(block_h or ho, ho)
+    conv_rows, band_in_rows, _step = band_geometry(bh, kh, sh, pool)
+    conv_wo = (wp - kw) // (sw or sh) + 1 if pool is not None else wo
+    return (band_in_rows * wp * cin_g        # x band int8 (group slice)
+            + kh * kw * cin_g * cout_g       # w tile int8
+            + 4 * conv_rows * conv_wo * cout_g  # acc scratch int32
+            + bh * wo * cout_g               # y band int8
+            + shift_vec_bytes(cout_g, per_channel))
 
 
 def _rup(x: int, mult: int) -> int:

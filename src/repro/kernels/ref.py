@@ -119,6 +119,32 @@ def qadd_ref(
     return requant(acc, shift, relu)
 
 
+def qconcat_ref(
+    xs,                      # sequence of int8 operands
+    align_shifts,            # per-operand right shifts to the common scale
+    axis: int = -1,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Channel-merge oracle: align each int8 operand to the common
+    fixed-point position (round-half-up right shift in int32, clipped
+    back to int8 — a zero shift is the identity), concatenate, then
+    apply the optional fused post-merge ReLU.  Concatenation itself
+    never changes values, so this per-operand alignment is the *entire*
+    fixed-point semantics of a ``Concat`` stage — and therefore exactly
+    what a producer conv's concat epilogue must apply before writing
+    its channel slice of the shared merge buffer."""
+    aligned = [
+        jnp.clip(align_shift(x.astype(jnp.int32), s),
+                 INT8_MIN, INT8_MAX).astype(jnp.int8)
+        if s else x
+        for x, s in zip(xs, align_shifts)
+    ]
+    y = jnp.concatenate(aligned, axis=axis)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
+
+
 def maxpool2d_ref(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
     """Standalone int8 NHWC max-pool."""
     return jax.lax.reduce_window(

@@ -295,6 +295,71 @@ def mobilenet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
     return b.build()
 
 
+def _inception(b: GraphBuilder, c1: int, c3r: int, c3: int,
+               c5r: int, c5: int, cp: int) -> None:
+    """GoogLeNet inception module: four parallel branches — 1x1, 1x1→3x3,
+    1x1→5x5, 3x3-maxpool→1x1 — channel-concatenated.  Every branch ends
+    in a dense conv, so the whole 4-way merge is concat-epilogue
+    eligible (each branch writes its channel slice of the shared merge
+    buffer in place)."""
+    split = b.tap()
+    b.conv(c1, 1)
+    b1 = b.tap()
+    b.from_tap(split).conv(c3r, 1).conv(c3, 3, pad=1)
+    b2 = b.tap()
+    b.from_tap(split).conv(c5r, 1).conv(c5, 5, pad=2)
+    b3 = b.tap()
+    b.from_tap(split).maxpool(3, 1, pad=1).conv(cp, 1)
+    b4 = b.tap()
+    b.from_tap(b1).concat_from(b2, b3, b4)
+
+
+def googlenet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
+                   in_hw: int = 24) -> Graph:
+    """CIFAR-scale GoogLeNet: stem + two inception modules (4-way
+    channel merges; a post-merge max-pool between them that the concat
+    fusion absorbs into the producers' epilogues) + GAP head — the
+    inception-class stress test of the toolflow surveys, small enough
+    for interpret mode."""
+    b = GraphBuilder("googlenet_tiny", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, pad=1).maxpool(2, 2)
+    _inception(b, 8, 8, 12, 4, 6, 6)      # merge Cout 8+12+6+6 = 32
+    b.maxpool(2, 2)                        # absorbed by the concat
+    _inception(b, 10, 8, 12, 4, 6, 4)     # ragged offsets 0/10/22/28
+    b.global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
+def _fire(b: GraphBuilder, s: int, e1: int, e3: int) -> None:
+    """SqueezeNet fire module: 1x1 squeeze feeding parallel 1x1 and 3x3
+    expands, channel-concatenated (both expands are dense convs, so the
+    2-way merge is concat-epilogue eligible)."""
+    b.conv(s, 1)
+    split = b.tap()
+    b.conv(e1, 1)
+    left = b.tap()
+    b.from_tap(split).conv(e3, 3, pad=1)
+    right = b.tap()
+    b.from_tap(left).concat_from(right)
+
+
+def squeezenet_tiny(batch: int = 1, num_classes: int = 10, seed: int = 0,
+                    in_hw: int = 24) -> Graph:
+    """CIFAR-scale SqueezeNet: strided stem + three fire modules (2-way
+    expand concats; a post-merge max-pool after the second that the
+    concat fusion absorbs) + GAP head."""
+    b = GraphBuilder("squeezenet_tiny", (batch, 3, in_hw, in_hw), seed)
+    b.conv(16, 3, stride=2, pad=1)
+    _fire(b, 8, 12, 12)
+    _fire(b, 8, 12, 12)
+    b.maxpool(2, 2)                        # absorbed by fire-2's concat
+    _fire(b, 12, 20, 12)                   # ragged offsets 0/20
+    b.global_avgpool()
+    b.fc(num_classes, relu=False, softmax=True)
+    return b.build()
+
+
 # ---------------------------------------------------------------------
 # Float oracle: run the graph directly with lax ops (NCHW).
 # ---------------------------------------------------------------------

@@ -1,0 +1,558 @@
+"""Banded concat-epilogue fusion: inception-class merges written
+in-place by the conv kernels.
+
+Tentpole claims pinned bit-for-bit:
+
+  * the dense and depthwise band kernels' ``out_buf`` path — each
+    producer writes its Cout tiles into a channel-offset slice of the
+    shared merge buffer, applying its operand alignment shift and the
+    merge's ReLU (and absorbed max-pool) in the producing epilogue — is
+    exactly the standalone Conv -> Concat program, swept over ragged
+    Cout tiles straddling a channel offset, stride-2 producers,
+    per-channel requant, mismatched operand scales and fused-pool-
+    after-concat ordering;
+  * the parser fold pass annotates producers/offsets so that the fused
+    and unfused programs are byte-identical at the spec level and
+    bit-identical at the output, with every ineligible shape falling
+    back to the standalone merge;
+  * the fused executor contains no standalone ``concatenate`` op
+    (probed in the jaxpr, the way the skip-fusion tests probe the
+    int add).
+
+Plus satellites: offsets exactly partition the merge Cout (property
+test), alias-resolved concat operands, the depthwise channel-multiplier
+and grouped band kernels, and the working-set model's single-charge /
+zero-charge concat rules.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import parser as P
+from repro.core import pipeline as pipe
+from repro.core.graph import Graph, Node
+from repro.core.resources import conv_band_working_set
+from repro.core.synthesis import CNN2Gate
+from repro.kernels import ref
+from repro.kernels.qconv import (dw_vmem_bytes, gconv_vmem_bytes, qconv2d,
+                                 qdwconv2d, qgconv2d)
+from repro.models import cnn
+
+RNG = np.random.default_rng(31)
+
+
+def i8(*shape):
+    return jnp.asarray(RNG.integers(-128, 128, shape, np.int8))
+
+
+def i32(*shape):
+    return jnp.asarray(RNG.integers(-500, 500, shape, np.int32))
+
+
+# ------------------------------------------------- kernel parity matrix
+
+def _oracle_concat(parts, shifts, relu, pool):
+    """The unfused program: every producer conv writes its own int8
+    tensor, the Concat stage aligns + merges them, a trailing max-pool
+    runs after the merge (graph order Concat -> ReLU -> MaxPool)."""
+    ys = [ref.qconv2d_ref(x, w, b, strides, shift, prelu, None)
+          for (x, w, b, strides, shift, prelu) in parts]
+    merged = ref.qconcat_ref(ys, shifts, axis=-1, relu=relu)
+    if pool is not None:
+        merged = ref.maxpool2d_ref(merged, pool[0], pool[1])
+    return merged
+
+
+def _fused_concat(parts, shifts, relu, pool, block_cout, block_h):
+    """The fused program: one shared merge buffer, each producer writes
+    its channel slice in place (offsets accumulate in operand order)."""
+    x0, w0, b0, strides0, _, _ = parts[0]
+    k = w0.shape[0]
+    ho = (x0.shape[1] - k) // strides0[0] + 1
+    wo = (x0.shape[2] - k) // strides0[1] + 1
+    if pool is not None:
+        ho = (ho - pool[0]) // pool[1] + 1
+        wo = (wo - pool[0]) // pool[1] + 1
+    ctot = sum(p[1].shape[-1] for p in parts)
+    buf = jnp.zeros((x0.shape[0], ho, wo, ctot), jnp.int8)
+    off = 0
+    for (x, w, b, strides, shift, prelu), s in zip(parts, shifts):
+        buf = qconv2d(x, w, b, strides=strides, shift=shift, relu=prelu,
+                      pool=pool, block_cout=block_cout, block_h=block_h,
+                      out_buf=buf, out_off=off, concat_shift=s,
+                      concat_relu=relu, interpret=True)
+        off += w.shape[-1]
+    return buf
+
+
+@pytest.mark.parametrize("cfg", [
+    # (h, couts, k, stride, pool, block_cout, block_h)
+    (14, (8, 8), 3, 1, None, 8, 4),        # tile-aligned offsets
+    (14, (5, 7, 6), 3, 1, None, 4, 3),     # ragged tiles straddle offsets
+    (15, (6, 10), 3, 2, None, 8, 2),       # stride-2 producers
+    (14, (5, 7), 3, 1, (2, 2), 4, 2),      # pool absorbed after concat
+    (19, (9, 7, 8), 3, 1, (3, 2), 16, 3),  # overlapping pool + one tile
+])
+@pytest.mark.parametrize("shifts_relu", [
+    ((0, 0, 0), False),      # aligned operands, plain concat
+    ((2, 0, 1), True),       # mismatched scales + merge ReLU
+])
+def test_concat_fused_kernel_matches_standalone(cfg, shifts_relu):
+    h, couts, k, stride, pool, bco, bh = cfg
+    shifts, relu = shifts_relu
+    shifts = shifts[:len(couts)]
+    cin = 6
+    x = i8(2, h, h, cin)
+    parts = [(x, i8(k, k, cin, c), i32(c), (stride, stride), 4, False)
+             for c in couts]
+    got = _fused_concat(parts, shifts, relu, pool, bco, bh)
+    want = _oracle_concat(parts, shifts, relu, pool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_concat_fused_per_channel_producer():
+    """A per-channel-quantized producer (tuple shift) writes its slice
+    of the merge buffer through the same epilogue."""
+    cin, c1, c2 = 6, 5, 7
+    x = i8(2, 12, 12, cin)
+    shift_vec = tuple(int(s) for s in RNG.integers(2, 6, c1))
+    parts = [(x, i8(3, 3, cin, c1), i32(c1), (1, 1), shift_vec, True),
+             (x, i8(3, 3, cin, c2), i32(c2), (1, 1), 4, True)]
+    got = _fused_concat(parts, (1, 0), False, None, 4, 3)
+    ys = [ref.qconv2d_ref(x, w, b, st, sh, rl, None)
+          for (x, w, b, st, sh, rl) in parts]
+    want = ref.qconcat_ref(ys, (1, 0), axis=-1, relu=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_concat_fused_preserves_sibling_slices():
+    """Writing one producer's slice must not disturb channels already
+    written by a sibling — probed with a sentinel-filled buffer."""
+    cin, c1 = 4, 6
+    x = i8(1, 10, 10, cin)
+    w, b = i8(3, 3, cin, c1), i32(c1)
+    buf = jnp.full((1, 8, 8, 16), 77, jnp.int8)
+    out = qconv2d(x, w, b, strides=(1, 1), shift=4, relu=False,
+                  block_cout=4, block_h=3, out_buf=buf, out_off=5,
+                  interpret=True)
+    out = np.asarray(out)
+    assert np.all(out[..., :5] == 77) and np.all(out[..., 11:] == 77)
+    want = np.asarray(ref.qconv2d_ref(x, w, b, (1, 1), 4, False, None))
+    np.testing.assert_array_equal(out[..., 5:11], want)
+
+
+# --------------------------------- depthwise multiplier / skip / concat
+
+def _dw_ref(x, w, b, strides, shift, relu, pool, m):
+    """ONNX depthwise with integer channel multiplier: output channel c
+    convolves input channel c // m."""
+    cout = w.shape[-1]
+    return ref.qconv2d_ref(x, w[:, :, None, :], b, strides, shift, relu,
+                           pool, groups=cout // m)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4])
+@pytest.mark.parametrize("pool", [None, (2, 2)])
+def test_dwconv_channel_multiplier_matches_ref(m, pool):
+    cin = 6
+    cout = m * cin
+    x, w, b = i8(2, 13, 13, cin), i8(3, 3, cout), i32(cout)
+    got = qdwconv2d(x, w, b, strides=(1, 1), shift=4, relu=True,
+                    pool=pool, block_c=4 * m, block_h=3, interpret=True)
+    want = _dw_ref(x, w, b, (1, 1), 4, True, pool, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dwconv_skip_epilogue_matches_two_stage():
+    """The depthwise kernel's new fused residual merge == the unfused
+    DwConv -> Add program (the dense kernel's epilogue semantics)."""
+    cin = 8
+    x, w, b = i8(2, 12, 12, cin), i8(3, 3, cin), i32(cin)
+    skip = i8(2, 10, 10, cin)
+    got = qdwconv2d(x, w, b, strides=(1, 1), shift=4, relu=False,
+                    block_c=4, block_h=3, skip=skip, skip_shifts=(2, 0),
+                    merge_shift=1, merge_relu=True, interpret=True)
+    y1 = _dw_ref(x, w, b, (1, 1), 4, False, None, 1)
+    want = ref.qadd_ref([y1, skip], (2, 0), shift=1, relu=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dwconv_concat_out_buf_matches_standalone():
+    """A depthwise producer (m = 2) and a dense producer sharing one
+    merge buffer == the standalone Concat over both outputs."""
+    cin, m = 4, 2
+    cdw, cdense = m * cin, 6
+    x = i8(2, 11, 11, cin)
+    wd, bd = i8(3, 3, cdw), i32(cdw)
+    wc, bc = i8(3, 3, cin, cdense), i32(cdense)
+    buf = jnp.zeros((2, 9, 9, cdw + cdense), jnp.int8)
+    buf = qdwconv2d(x, wd, bd, strides=(1, 1), shift=4, relu=False,
+                    block_c=2 * m, block_h=4, out_buf=buf, out_off=0,
+                    concat_shift=1, concat_relu=True, interpret=True)
+    buf = qconv2d(x, wc, bc, strides=(1, 1), shift=5, relu=False,
+                  block_cout=4, block_h=4, out_buf=buf, out_off=cdw,
+                  concat_shift=0, concat_relu=True, interpret=True)
+    ys = [_dw_ref(x, wd, bd, (1, 1), 4, False, None, m),
+          ref.qconv2d_ref(x, wc, bc, (1, 1), 5, False, None)]
+    want = ref.qconcat_ref(ys, (1, 0), axis=-1, relu=True)
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(want))
+
+
+@pytest.mark.parametrize("groups,cin,cout", [(2, 8, 12), (3, 9, 6)])
+def test_ragged_grouped_conv_matches_ref(groups, cin, cout):
+    """qgconv2d (group on its own grid axis) == the grouped oracle."""
+    x = i8(2, 12, 12, cin)
+    w, b = i8(3, 3, cin // groups, cout), i32(cout)
+    got = qgconv2d(x, w, b, groups=groups, strides=(1, 1), shift=4,
+                   relu=True, pool=(2, 2), block_h=3, interpret=True)
+    want = ref.qconv2d_ref(x, w, b, (1, 1), 4, True, (2, 2),
+                           groups=groups)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------ parser fold pass
+
+def _two_branch(name="cc2", c1=8, c2=8, fanout=False):
+    b = cnn.GraphBuilder(name, (1, 3, 12, 12), 7)
+    b.conv(8, 3, pad=1)
+    split = b.tap()
+    b.conv(c1, 1, relu=False)
+    left = b.tap()
+    b.from_tap(split).conv(c2, 3, pad=1, relu=False)
+    right = b.tap()
+    if fanout:  # second consumer of the right operand (output dangles)
+        b.from_tap(right).conv(4, 1)
+    b.from_tap(left).concat_from(right)
+    b.global_avgpool()
+    b.fc(3, relu=False, softmax=True)
+    return b.build()
+
+
+def test_fold_annotates_producers_and_offsets():
+    pm = P.parse(_two_branch(c1=5, c2=7))
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert cc.concat_fused
+    prods = [li for li in pm.layers if li.concat is cc]
+    assert [p.concat_offset for p in prods] == [0, 5]
+    assert sum(p.c_out for p in prods) == cc.c_out == 12
+
+
+def test_fold_keeps_concat_stage_scheduled():
+    """The Concat stays in the schedule (it is the merge tensor's
+    binding point), so fused/unfused stage names line up 1:1 apart from
+    any absorbed pool."""
+    pm_f = P.parse(_two_branch())
+    pm_u = P.parse(_two_branch(), fuse_concat=False)
+    assert [li.name for li in pm_f.layers] == [li.name for li in pm_u.layers]
+
+
+def test_fanout_operand_not_folded():
+    """An operand that also feeds another consumer must stay
+    addressable — the whole concat falls back to the standalone merge."""
+    pm = P.parse(_two_branch(fanout=True))
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert not cc.concat_fused
+    assert not any(li.concat is not None for li in pm.layers)
+
+
+def test_nonconv_operand_not_folded():
+    """An operand produced by a standalone pool (not a band-kernel
+    conv) makes the whole concat fall back to the standalone merge."""
+    b = cnn.GraphBuilder("ccpoolop", (1, 3, 12, 12), 7)
+    b.conv(8, 3, pad=1)
+    split = b.tap()
+    b.conv(8, 1, relu=False)
+    left = b.tap()
+    b.from_tap(split).maxpool(3, 1, pad=1)   # same spatial geometry
+    right = b.tap()
+    b.from_tap(left).concat_from(right)
+    b.global_avgpool()
+    b.fc(3, relu=False, softmax=True)
+    pm = P.parse(b.build())
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert not cc.concat_fused
+    assert not any(li.concat is not None for li in pm.layers)
+
+
+def test_pooled_producer_not_folded():
+    """A producer with its own fused pool is ineligible (its epilogue
+    already pools; the merge cannot ride the same tail)."""
+    b = cnn.GraphBuilder("ccpool", (1, 3, 12, 12), 7)
+    b.conv(8, 3, pad=1)
+    split = b.tap()
+    b.conv(8, 3, pad=1, relu=False)
+    b.maxpool(2, 2)
+    left = b.tap()
+    b.from_tap(split).conv(8, 2, stride=2, relu=False)
+    right = b.tap()
+    b.from_tap(left).concat_from(right)
+    b.global_avgpool()
+    b.fc(3, relu=False, softmax=True)
+    pm = P.parse(b.build())
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert not cc.concat_fused
+
+
+def test_absorbed_pool_after_concat():
+    """Concat -> MaxPool collapses: the pool runs in every producer's
+    epilogue and the shared buffer takes the pooled geometry."""
+    b = cnn.GraphBuilder("ccpool2", (1, 3, 12, 12), 7)
+    b.conv(8, 3, pad=1)
+    split = b.tap()
+    b.conv(6, 1, relu=False)
+    left = b.tap()
+    b.from_tap(split).conv(6, 3, pad=1, relu=False)
+    right = b.tap()
+    b.from_tap(left).concat_from(right)
+    b.maxpool(2, 2)
+    b.global_avgpool()
+    b.fc(3, relu=False, softmax=True)
+    pm = P.parse(b.build())
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert cc.concat_fused and cc.pool is not None
+    assert cc.out_shape[2:] == (6, 6)
+    assert not any(li.kind == P.POOL and li.pool_type == "max"
+                   for li in pm.layers)
+
+
+def test_elided_op_between_branch_and_merge_still_folds():
+    """A single-consumer Dropout between a branch conv and the Concat is
+    absorbed into the conv's stage (output renamed); the fold must still
+    see the conv as the operand's producer and annotate it."""
+    g = _two_branch()
+    cat = next(n for n in g.nodes if n.op_type == "Concat")
+    t = cat.inputs[1]
+    nodes = list(g.nodes)
+    nodes.insert(nodes.index(cat),
+                 Node("Dropout", "drop0", [t], [t + "_drop"]))
+    cat.inputs = [cat.inputs[0], t + "_drop"]
+    g2 = Graph(g.name, nodes, g.inputs, g.outputs, g.initializers)
+    pm = P.parse(g2)
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert cc.concat_fused
+    prods = [li for li in pm.layers if li.concat is cc]
+    assert len(prods) == 2 and prods[1].output == cc.inputs[1]
+
+
+def test_alias_resolved_operand_reads_canonical_tensor():
+    """An Identity behind a fan-out tensor is NOT absorbed — it lands in
+    the alias map, and the Concat's operand must canonicalise through it
+    (the fold then correctly declines: the operand fans out) so the
+    standalone merge reads a tensor that actually exists at runtime."""
+    b = cnn.GraphBuilder("ccalias", (1, 3, 10, 10), 7)
+    b.conv(8, 3, pad=1, relu=True)
+    split = b.tap()
+    b.conv(8, 1, relu=False)
+    left = b.tap()
+    b.from_tap(split).conv(8, 3, pad=1, relu=False)
+    right = b.tap()
+    b.from_tap(left).concat_from(right, split)
+    b.global_avgpool()
+    b.fc(3, relu=False, softmax=True)
+    g = b.build()
+    cat = next(n for n in g.nodes if n.op_type == "Concat")
+    t = cat.inputs[2]             # the fan-out split tensor
+    nodes = list(g.nodes)
+    nodes.insert(nodes.index(cat),
+                 Node("Identity", "id0", [t], [t + "_id"]))
+    cat.inputs = cat.inputs[:2] + [t + "_id"]
+    g2 = Graph(g.name, nodes, g.inputs, g.outputs, g.initializers)
+    pm = P.parse(g2)
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert cc.inputs[2] == t      # canonicalised through the alias
+    assert not cc.concat_fused    # split operand fans out: no fold
+    x = np.random.default_rng(9).standard_normal(
+        g2.inputs[0].shape).astype(np.float32)
+    gate = CNN2Gate.from_graph(g2)
+    gate.calibrate_quantization(x)
+    y = pipe.run_int8(gate.quantized, x)  # env lookup hits the real tensor
+    assert y.shape == (1, 3)
+
+
+# ------------------------------- offsets partition the merge (property)
+
+def _offsets_partition(couts):
+    b = cnn.GraphBuilder("prop", (1, 3, 8, 8), 11)
+    b.conv(4, 3, pad=1)
+    split = b.tap()
+    taps = []
+    for c in couts:
+        b.from_tap(split).conv(int(c), 1, relu=False)
+        taps.append(b.tap())
+    b.from_tap(taps[0]).concat_from(*taps[1:])
+    b.global_avgpool()
+    b.fc(2, relu=False, softmax=True)
+    pm = P.parse(b.build())
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    assert cc.concat_fused
+    prods = [(li.concat_offset, li.c_out)
+             for li in pm.layers if li.concat is cc]
+    prods.sort()
+    cursor = 0
+    for off, c in prods:
+        assert off == cursor  # contiguous, in operand order
+        cursor += c
+    assert cursor == cc.c_out
+
+
+@given(st.lists(st.integers(1, 9), min_size=2, max_size=5))
+@settings(max_examples=20, deadline=None)
+def test_offsets_exactly_partition_merge_cout(couts):
+    _offsets_partition(couts)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_offsets_partition_seeded(seed):
+    """Deterministic stand-in for the property test (always runs, even
+    where hypothesis is stubbed out by conftest)."""
+    rng = np.random.default_rng(seed)
+    couts = rng.integers(1, 10, rng.integers(2, 6)).tolist()
+    _offsets_partition(couts)
+
+
+# --------------------------------------------------- end-to-end parity
+
+@pytest.mark.parametrize("build", [cnn.googlenet_tiny, cnn.squeezenet_tiny])
+def test_model_fused_matches_unfused_bit_exact(build):
+    """The acceptance gate: every eligible concat fused, and the single
+    jitted closure is bit-identical to the standalone-merge program."""
+    g = build(batch=2)
+    x = np.random.default_rng(3).standard_normal(
+        g.inputs[0].shape).astype(np.float32)
+    gate = CNN2Gate.from_graph(g)
+    gate.calibrate_quantization(x)
+    pm_f = gate.parsed
+    ccs = [li for li in pm_f.layers if li.kind == P.CONCAT]
+    assert ccs and all(cc.concat_fused for cc in ccs)
+    pm_u = P.parse(g, fuse_concat=False)
+    y_f = pipe.run_int8(gate.quantized, x)
+    y_u = pipe.run_int8(pipe.build_quantized(pm_u, gate.specs), x)
+    assert jnp.array_equal(y_f, y_u)
+
+
+def test_fused_closure_lowers_at_any_batch():
+    """The merge buffer takes its batch from the traced activation, not
+    the parse-time shape — the fused closure must run at a batch other
+    than the one the graph was built with (fullflow compiles a
+    batch-1 sample)."""
+    g = cnn.squeezenet_tiny(batch=2)
+    rng = np.random.default_rng(11)
+    x2 = rng.standard_normal(g.inputs[0].shape).astype(np.float32)
+    gate = CNN2Gate.from_graph(g)
+    gate.calibrate_quantization(x2)
+    x3 = rng.standard_normal((3,) + g.inputs[0].shape[1:]).astype(
+        np.float32)
+    y_f = pipe.run_int8(gate.quantized, x3)
+    qm_u = pipe.build_quantized(P.parse(g, fuse_concat=False), gate.specs)
+    assert jnp.array_equal(y_f, pipe.run_int8(qm_u, x3))
+
+
+def test_specs_byte_identical_fused_vs_unfused():
+    """calibrate_quantization must emit the SAME specs for both
+    programs — the concat keeps its name, operand tensors and relu, so
+    scale threading never sees the fusion."""
+    g = cnn.googlenet_tiny(batch=1)
+    x = np.random.default_rng(5).standard_normal(
+        g.inputs[0].shape).astype(np.float32)
+    gate_f = CNN2Gate.from_graph(g)
+    gate_f.calibrate_quantization(x)
+    gate_u = CNN2Gate.from_graph(g, fuse_concat=False)
+    gate_u.calibrate_quantization(x)
+    assert gate_f.specs == gate_u.specs
+    mf = pipe.thread_scales(gate_f.parsed, gate_f.specs)
+    mu = pipe.thread_scales(gate_u.parsed, gate_u.specs)
+    assert all(mu[t] == m for t, m in mf.items())
+    # the only tensors the fused threading lacks are pre-pool concat
+    # intermediates absorbed into the merge (pool is scale-transparent)
+    absorbed = {cc.name + "_out" for cc in gate_f.parsed.layers
+                if cc.kind == P.CONCAT and cc.pool is not None}
+    assert set(mu) - set(mf) == absorbed and absorbed
+
+
+# -------------------------------------- jaxpr: no standalone concat op
+
+def _concat_eqns(jaxpr) -> int:
+    """`concatenate` eqns reaching XLA outside pallas_call — a
+    standalone Concat stage would show up here; the fused program must
+    have none (mirrors test_skip_fusion's int-add probe)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "concatenate":
+            n += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            if isinstance(v, jax.core.ClosedJaxpr):
+                n += _concat_eqns(v.jaxpr)
+            elif isinstance(v, jax.core.Jaxpr):
+                n += _concat_eqns(v)
+    return n
+
+
+def test_fused_program_has_no_standalone_concat():
+    g = cnn.squeezenet_tiny(batch=1)
+    x = np.random.default_rng(7).standard_normal(
+        g.inputs[0].shape).astype(np.float32)
+    gate = CNN2Gate.from_graph(g)
+    gate.calibrate_quantization(x)
+    ex_f = pipe.make_executor(gate.quantized, interpret=True)
+    assert _concat_eqns(jax.make_jaxpr(ex_f)(jnp.asarray(x)).jaxpr) == 0
+    # ...and the unfused program DOES concatenate (the probe is valid)
+    gate_u = CNN2Gate.from_graph(g, fuse_concat=False)
+    gate_u.apply_quantization(gate.specs)
+    ex_u = pipe.make_executor(gate_u.quantized, interpret=True)
+    assert _concat_eqns(jax.make_jaxpr(ex_u)(jnp.asarray(x)).jaxpr) > 0
+
+
+# ------------------------------------------------- working-set model
+
+def test_standalone_concat_charged_once_per_merge():
+    """The concat merge buffer is charged once per merge tensor (its
+    operand slices partition the output band), unlike an Add whose
+    operands stack on top of the output."""
+    pm = P.parse(cnn.googlenet_tiny(batch=1), fuse_concat=False)
+    cc = next(li for li in pm.layers if li.kind == P.CONCAT)
+    _n, c, _h, w = cc.out_shape
+    bh = 2
+    band = bh * w * c
+    only_cc = conv_band_working_set([cc], 1, bh)
+    assert only_cc == band * (1 + 4 + 1)    # NOT (n_ops + 4 + 1)
+    add = P.LayerInfo(kind=P.ADD, name="a", inputs=["x", "y"],
+                      output="a_out", weight=None, bias=None,
+                      in_shape=cc.out_shape, out_shape=cc.out_shape,
+                      kernel_shape=(0, 0), strides=(1, 1),
+                      pads=(0, 0, 0, 0), dilations=(1, 1))
+    assert conv_band_working_set([add], 1, bh) == band * (2 + 4 + 1)
+
+
+def test_fused_concat_charges_zero():
+    """A fused concat stage adds nothing: the slices live in the
+    producers' own output bands, so the fused program's peak never
+    exceeds the unfused one."""
+    pm_f = P.parse(cnn.googlenet_tiny(batch=1))
+    pm_u = P.parse(cnn.googlenet_tiny(batch=1), fuse_concat=False)
+    ccs_f = [li for li in pm_f.layers if li.kind == P.CONCAT]
+    assert all(cc.concat_fused for cc in ccs_f)
+    assert conv_band_working_set(ccs_f, 2, 2) == 0
+    ws_f = conv_band_working_set(pm_f.layers, 2, 2)
+    ws_u = conv_band_working_set(pm_u.layers, 2, 2)
+    assert 0 < ws_f <= ws_u
+
+
+def test_dw_multiplier_and_grouped_working_set():
+    """The dw estimate's input band shrinks with the multiplier; the
+    grouped estimate is banded per group, far below the old whole-plane
+    reference charge."""
+    base = dw_vmem_bytes(14, 32, 3, 3, 8, 12, 12, block_h=4)
+    m4 = dw_vmem_bytes(14, 32, 3, 3, 8, 12, 12, block_h=4, multiplier=4)
+    assert m4 < base
+    hp = wp = 26
+    cin, cout, groups, oh = 16, 16, 2, 24
+    whole_plane = (hp * wp * cin + 3 * 3 * (cin // groups) * cout
+                   + 4 * oh * oh * cout + oh * oh * cout + 4)
+    banded = gconv_vmem_bytes(wp, cin // groups, cout // groups,
+                              3, 3, oh, oh, block_h=4)
+    assert banded < whole_plane // 4

@@ -169,21 +169,36 @@ def test_multi_consumer_conv_output_not_folded():
     assert len(adds) + len(merged) == 2 and len(merged) >= 1
 
 
-def test_depthwise_producer_not_folded():
-    """Depthwise convs run on the VPU band kernel, which has no skip
-    epilogue — an Add over two depthwise outputs stays standalone."""
-    b = cnn.GraphBuilder("dwadd", (1, 3, 12, 12), 4)
-    b.conv(16, 3, pad=1)
-    split = b.tap()
-    b.dwconv(3, pad=1, relu=False)
-    left = b.tap()
-    b.from_tap(split).dwconv(3, pad=1, relu=False)
-    b.add_from(left, relu=True)
-    b.global_avgpool()
-    b.fc(3, relu=False, softmax=True)
-    pm = P.parse(b.build())
-    assert any(li.kind == P.ADD for li in pm.layers)
-    assert not any(li.merge is not None for li in pm.layers)
+def test_depthwise_producer_folds_and_matches():
+    """The depthwise band kernel now carries the same skip epilogue as
+    the dense one: an Add whose second operand is a single-consumer
+    depthwise conv folds into that conv, bit-exact vs the unfused
+    program (MobileNet-v2-style inverted-residual merges)."""
+    def build():
+        b = cnn.GraphBuilder("dwadd", (1, 3, 12, 12), 4)
+        b.conv(16, 3, pad=1)
+        split = b.tap()
+        b.dwconv(3, pad=1, relu=False)
+        left = b.tap()
+        b.from_tap(split).dwconv(3, pad=1, relu=False)
+        b.add_from(left, relu=True)
+        b.global_avgpool()
+        b.fc(3, relu=False, softmax=True)
+        return b.build()
+
+    g = build()
+    pm = P.parse(g)
+    merged = [li for li in pm.layers if li.merge is not None]
+    assert len(merged) == 1 and merged[0].is_dw_kernel
+    assert not any(li.kind == P.ADD for li in pm.layers)
+    x = np.random.default_rng(0).standard_normal(
+        g.inputs[0].shape).astype(np.float32)
+    gate = CNN2Gate.from_graph(g)
+    gate.calibrate_quantization(x)
+    y_f = pipe.run_int8(pipe.build_quantized(pm, gate.specs), x)
+    y_u = pipe.run_int8(
+        pipe.build_quantized(P.parse(g, fuse_skip=False), gate.specs), x)
+    assert jnp.array_equal(y_f, y_u)
 
 
 def test_folded_stage_absorbs_following_maxpool():
