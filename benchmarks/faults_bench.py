@@ -1,19 +1,22 @@
-"""Fault-injection bench: SEU detection/recovery rates and guard
-overhead on resnet_tiny (DESIGN.md §9).
+"""Fault-injection bench: vectorized SER campaign + guard overhead on
+resnet_tiny (DESIGN.md §9, §11).
 
-Sweeps weight-bit flip counts through the guarded executor (one
-calibration kit, re-deployed per trial via ``with_program``) and
-reports, per flip count: detection rate, bit-exact recovery rate,
-silent-corruption rate and masked-fault rate, plus the audit's runtime
-overhead over the plain executor.  Emits ``BENCH_faults.json``.
+Statistical soft-error study via ``core/ser.py``: ≥100 sampled
+weight-bit trials per flip count batched through ONE compiled executor
+(weights as vmapped call-time arguments), classified
+detected/masked/silent against the golden run with Wilson 95%
+confidence intervals, and recovered through the vectorized
+checkpoint-replay path.  From the campaign evidence the bench derives
+the selective-hardening audit set (greedy set cover over
+output-reaching trials) and measures its runtime overhead next to the
+full audit's — the number the ISSUE requires to land measurably below
+the full-audit factor.  Emits ``BENCH_faults.json``.
 """
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import faults as F
 from repro.core import pipeline as pipe
+from repro.core import ser
 from repro.core.guard import GuardPolicy
 from repro.core.synthesis import CNN2Gate
 from repro.models import cnn
@@ -21,7 +24,8 @@ from repro.models import cnn
 from .common import emit, timeit, write_bench_json
 
 FLIP_COUNTS = (1, 2, 4, 8)
-TRIALS = 3
+TRIALS = 100
+CHECKPOINT_K = 2
 
 
 def run() -> None:
@@ -33,57 +37,69 @@ def run() -> None:
 
     plain = pipe.make_executor(gate.quantized, interpret=True)
     audited = pipe.make_executor(gate.quantized, interpret=True, audit=True)
-    clean = np.asarray(plain(xj))
     t_plain = timeit(plain, xj)
     t_audit = timeit(lambda v: audited(v)[0], xj)
     emit("faults/audit_overhead", t_audit,
-         f"x{t_audit / t_plain:.2f} vs plain executor")
+         f"x{t_audit / t_plain:.2f} vs plain executor (full audit)")
 
     kit = gate.build_guarded(x_cal=x,
                              policy=GuardPolicy(margin=0.0, sat_tol=0.0))
     t_guard_clean = timeit(lambda v: kit(v)[0], xj)
     emit("faults/guarded_clean", t_guard_clean, "no-fault guarded call")
 
+    # ---- vectorized SER campaign, >=100 trials per flip count -------
+    campaigns = []
     sweep = []
     for n_flips in FLIP_COUNTS:
-        detected = recovered = silent = masked = 0
-        times = []
-        for trial in range(TRIALS):
-            plan = F.FaultPlan.sample(gate.quantized, n_flips,
-                                      kinds=(F.WEIGHT_BIT,),
-                                      seed=1000 * n_flips + trial)
-            gx = kit.with_program(F.inject(gate.quantized, plan))
-            t0 = time.perf_counter()
-            y, report = gx(xj)
-            times.append(time.perf_counter() - t0)
-            exact = np.array_equal(np.asarray(y), clean)
-            if report.detected:
-                detected += 1
-                recovered += int(exact)
-            elif exact:
-                masked += 1      # flip never reached the output
-            else:
-                silent += 1      # corruption escaped the audit
-        row = {
-            "flips": n_flips, "trials": TRIALS,
-            "detected": detected, "recovered_bit_exact": recovered,
-            "masked": masked, "silent": silent,
-            "mean_guarded_s": float(np.mean(times)),
-        }
-        sweep.append(row)
-        emit(f"faults/flips{n_flips}", float(np.mean(times)) * 1e6,
-             f"det {detected}/{TRIALS} rec {recovered}/{TRIALS} "
-             f"silent {silent}")
+        c = ser.run_campaign(gate, x, trials=TRIALS, flips=n_flips,
+                             kinds=(ser.F.WEIGHT_BIT,),
+                             seed=1000 * n_flips,
+                             checkpoints=CHECKPOINT_K)
+        campaigns.append(c)
+        s = c.summary()
+        sweep.append(s)
+        cnt = s["counts"]
+        det = s["rates"]["detected"]
+        emit(f"faults/flips{n_flips}",
+             float(s["mean_replayed_stages"]),
+             f"det {cnt['detected']}/{c.trials} "
+             f"[{det['lo']:.2f},{det['hi']:.2f}] "
+             f"silent {cnt['silent']} "
+             f"replay {s['mean_replayed_stages']:.1f}/{s['n_stages']}")
 
-    assert all(r["silent"] == 0 for r in sweep), \
+    assert all(s["counts"]["silent"] == 0 for s in sweep), \
         "corruption escaped the zero-slack audit"
+
+    # ---- selective hardening: derive, then measure the overhead -----
+    policy = ser.derive_guard_policy(campaigns, gate.parsed)
+    sel_tensors = tuple(
+        ql.info.output for ql in gate.quantized.layers
+        if ql.info.name in set(policy.audit_stages))
+    sel_audited = pipe.make_executor(gate.quantized, interpret=True,
+                                    audit=sel_tensors)
+    t_sel = timeit(lambda v: sel_audited(v)[0], xj)
+    emit("faults/selective_audit", t_sel,
+         f"x{t_sel / t_plain:.2f} auditing "
+         f"{len(policy.audit_stages)}/{len(gate.parsed.layers)} stages "
+         f"(full audit x{t_audit / t_plain:.2f})")
+    assert t_sel < t_audit, \
+        "selective audit must cost less than the full audit"
+
     write_bench_json("faults", {
+        "version": ser.SCHEMA_VERSION,
         "model": "resnet_tiny",
         "policy": {"margin": 0.0, "sat_tol": 0.0},
+        "trials_per_flip": TRIALS,
+        "checkpoints": CHECKPOINT_K,
         "plain_us": t_plain,
         "audited_us": t_audit,
         "audit_overhead_x": t_audit / t_plain,
         "guarded_clean_us": t_guard_clean,
+        "selective": {
+            "audit_stages": list(policy.audit_stages),
+            "audited_us": t_sel,
+            "overhead_x": t_sel / t_plain,
+        },
         "sweep": sweep,
     })
 

@@ -136,17 +136,25 @@ class RobustEvaluator(DesignSpace):
         threshold), so BF-DSE skips it and RL-DSE rewards it -1; the
         search itself never sees the exception.
       * **resumable journal** — every completed report and quarantine
-        decision is written through to ``journal_path`` (atomic
-        tmp+rename JSON).  A fresh evaluator pointed at the same
-        journal replays those results without touching the underlying
-        space — kill the sweep, rerun the command, and only the
-        remaining candidates compile.
+        decision is appended to ``journal_path`` as one JSON line
+        (schema v2: a ``{"journal": ..., "version": 2}`` header line,
+        then one record per line).  A fresh evaluator pointed at the
+        same journal replays those results without touching the
+        underlying space — kill the sweep, rerun the command, and only
+        the remaining candidates compile.  Append-per-record means a
+        crash mid-write can only tear the LAST line: on load, a
+        corrupt/truncated journal is detected, backed up aside
+        (``<path>.corrupt``), and the sweep resumes from the valid
+        prefix instead of crashing — ``stats["journal_dropped"]``
+        counts the discarded lines.  Legacy v1 journals (one monolithic
+        JSON object) are migrated in place on first load.
 
     ``stats`` counts evaluated / journal_hits / retries / errors /
-    timeouts / quarantined for reporting.
+    timeouts / quarantined / journal_dropped for reporting.
     """
 
     QUOTAS = ("lut", "dsp", "mem", "reg")
+    JOURNAL_VERSION = 2
 
     def __init__(self, space: DesignSpace,
                  timeout_s: Optional[float] = None,
@@ -163,12 +171,10 @@ class RobustEvaluator(DesignSpace):
         self.completed: Dict[str, dict] = {}
         self.quarantined: Dict[str, str] = {}
         self.stats = {"evaluated": 0, "journal_hits": 0, "retries": 0,
-                      "errors": 0, "timeouts": 0, "quarantined": 0}
+                      "errors": 0, "timeouts": 0, "quarantined": 0,
+                      "journal_dropped": 0}
         if journal_path and os.path.exists(journal_path):
-            with open(journal_path) as f:
-                state = json.load(f)
-            self.completed = dict(state.get("completed", {}))
-            self.quarantined = dict(state.get("quarantined", {}))
+            self._load_journal()
 
     # ------------------------------------------------ space delegation
     def options(self) -> List[Tuple]:
@@ -242,20 +248,76 @@ class RobustEvaluator(DesignSpace):
                 last = e
                 continue
             self.stats["evaluated"] += 1
-            self.completed[key] = {"percents": rep.percents, "raw": rep.raw,
-                                   "fits": rep.fits}
-            self._save()
+            rec = {"percents": rep.percents, "raw": rep.raw,
+                   "fits": rep.fits}
+            self.completed[key] = rec
+            self._append({"kind": "completed", "key": key, "record": rec})
             return rep
-        self.quarantined[key] = f"{type(last).__name__}: {last}"
+        why = f"{type(last).__name__}: {last}"
+        self.quarantined[key] = why
         self.stats["quarantined"] += 1
-        self._save()
+        self._append({"kind": "quarantined", "key": key, "why": why})
         return self._failed()
 
     def quarantined_options(self) -> List[Tuple[List, str]]:
         """Quarantine list with the option decoded back from its key."""
         return [(json.loads(k), why) for k, why in self.quarantined.items()]
 
-    def _save(self) -> None:
+    # ---------------------------------------------------- journal (v2)
+    def _load_journal(self) -> None:
+        """Load ``journal_path``: v2 JSONL, legacy v1 monolithic JSON
+        (migrated in place), or a corrupt/truncated file of either —
+        detected, backed up to ``<path>.corrupt`` and resumed from the
+        longest valid prefix."""
+        with open(self.journal_path) as f:
+            text = f.read()
+        lines = text.splitlines()
+        dropped = 0
+        if len(lines) == 1 or (lines and not lines[0].lstrip()
+                               .startswith('{"journal"')):
+            # legacy v1: the whole file is one JSON object (possibly
+            # pretty-printed across lines).  A truncated v1 journal
+            # fails to parse and is discarded wholesale — v1 had no
+            # record boundaries to salvage a prefix from.
+            try:
+                state = json.loads(text)
+                self.completed = dict(state.get("completed", {}))
+                self.quarantined = dict(state.get("quarantined", {}))
+            except (json.JSONDecodeError, AttributeError):
+                dropped = max(1, len(lines))
+        else:
+            for n, line in enumerate(lines):
+                if not line.strip():
+                    continue
+                try:
+                    rec = json.loads(line)
+                    if rec.get("journal"):  # header line
+                        continue
+                    if rec["kind"] == "completed":
+                        self.completed[rec["key"]] = rec["record"]
+                    elif rec["kind"] == "quarantined":
+                        self.quarantined[rec["key"]] = rec["why"]
+                    else:
+                        raise KeyError(rec["kind"])
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    # torn tail (or mid-file corruption): keep the
+                    # valid prefix, drop this line and everything after
+                    # it — later lines may depend on sync we can no
+                    # longer trust
+                    dropped = len(lines) - n
+                    break
+        if dropped:
+            os.replace(self.journal_path, self.journal_path + ".corrupt")
+            self.stats["journal_dropped"] += dropped
+        # persist migration/recovery so the next crash tears v2 lines,
+        # not a half-migrated hybrid
+        self._rewrite_journal()
+
+    def _journal_header(self) -> str:
+        return json.dumps({"journal": "dse-robust-evaluator",
+                           "version": self.JOURNAL_VERSION})
+
+    def _rewrite_journal(self) -> None:
         if not self.journal_path:
             return
         d = os.path.dirname(self.journal_path)
@@ -263,10 +325,28 @@ class RobustEvaluator(DesignSpace):
             os.makedirs(d, exist_ok=True)
         tmp = self.journal_path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"completed": self.completed,
-                       "quarantined": self.quarantined},
-                      f, indent=1, default=str)
+            f.write(self._journal_header() + "\n")
+            for key, rec in self.completed.items():
+                f.write(json.dumps({"kind": "completed", "key": key,
+                                    "record": rec}, default=str) + "\n")
+            for key, why in self.quarantined.items():
+                f.write(json.dumps({"kind": "quarantined", "key": key,
+                                    "why": why}, default=str) + "\n")
         os.replace(tmp, self.journal_path)
+
+    def _append(self, entry: dict) -> None:
+        """One record, one line, one append: a crash can only tear the
+        final line, which ``_load_journal`` recovers from."""
+        if not self.journal_path:
+            return
+        d = os.path.dirname(self.journal_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fresh = not os.path.exists(self.journal_path)
+        with open(self.journal_path, "a") as f:
+            if fresh:
+                f.write(self._journal_header() + "\n")
+            f.write(json.dumps(entry, default=str) + "\n")
 
 
 def _within(report: ResourceReport, th: Thresholds) -> bool:

@@ -15,6 +15,14 @@ magnitude drifted past the margin — is flagged as a suspected upset.
 
 Degradation ladder (in order; each rung audits its own output):
 
+  0. ``checkpoint_replay``  — when the executor was built with
+     stage-boundary checkpoints, localize the fault (the earliest
+     flagged stage), take the nearest snapshot strictly upstream of it
+     and replay only the downstream stages on the *golden* program.
+     Bit-exact against full golden reexecution, at a cost bounded by
+     the stages downstream of the fault instead of the network depth
+     (DESIGN.md §11).  A snapshot poisoned by an unflagged upstream
+     upset re-flags on the replay's own audit and escalates.
   1. ``reexecute``          — run the same program again.  Recovers
      transient in-flight upsets (an SEU in a line buffer does not
      repeat); a persistent fault (corrupted staged weight) re-flags
@@ -61,9 +69,16 @@ class GuardPolicy:
 
     margin: float = 0.25
     sat_tol: float = 0.02
+    checkpoint_replay: bool = True
     retry: bool = True
     fallback_unfused: bool = True
     fallback_per_tensor: bool = True
+    #: selective hardening (DESIGN.md §11): audit only these stages
+    #: (by stage name; ``None`` audits every stage).  Derived from a SER
+    #: campaign by :func:`repro.core.ser.derive_guard_policy` — the
+    #: minimal stage set whose audits cover every observed
+    #: output-reaching upset, closing most of the full-audit overhead.
+    audit_stages: Optional[Tuple[str, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,10 +105,14 @@ class StageAudit:
 @dataclasses.dataclass
 class ActionResult:
     """One degradation-ladder rung: which stages were still flagged
-    after applying it (empty = the rung recovered the run)."""
+    after applying it (empty = the rung recovered the run).  The
+    checkpoint-replay rung additionally records how many stages it
+    re-ran (``replayed``) and from which snapshot (``boundary``)."""
 
     action: str
     flagged: List[str]
+    replayed: Optional[int] = None
+    boundary: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -110,6 +129,24 @@ class GuardReport:
     @property
     def detected(self) -> bool:
         return bool(self.flagged)
+
+    @property
+    def outcome(self) -> str:
+        """One-word outcome for deployment counters (launch/serve.py):
+        ``clean`` (no flags), ``checkpoint_replayed`` / ``reexecuted``
+        / ``fell_back`` (which ladder rung recovered), ``unrecovered``
+        (every rung exhausted still out of envelope).  Upsets the audit
+        never sees are *masked* — invisible here by definition; their
+        rate is what the offline SER campaign (core/ser.py) measures."""
+        if not self.detected:
+            return "clean"
+        if not self.ok:
+            return "unrecovered"
+        if self.recovered_by == "checkpoint_replay":
+            return "checkpoint_replayed"
+        if self.recovered_by == "reexecute":
+            return "reexecuted"
+        return "fell_back"
 
 
 @dataclasses.dataclass
@@ -144,6 +181,12 @@ class GuardedExecutor:
     ``faults`` for in-flight activation faults) to exercise the guard;
     it defaults to the golden program itself.
 
+    ``checkpoints`` arms the stage-boundary recovery rung: an int K asks
+    :func:`resources.plan_checkpoints` for the equal-cumulative-MAC
+    placement, a sequence pins explicit boundary indices, and
+    ``None``/0 disables the rung (the primary program then snapshots
+    nothing and the jitted closure is unchanged).
+
     Calling the executor returns ``(logits, GuardReport)``.
     """
 
@@ -152,7 +195,8 @@ class GuardedExecutor:
                  n_i: int = 16, n_l: int = 32,
                  block_h: Optional[int] = None,
                  interpret: Optional[bool] = True,
-                 faults: Optional[Dict] = None):
+                 faults: Optional[Dict] = None,
+                 checkpoints=None):
         if gate.quantized is None or gate.specs is None:
             raise RuntimeError("apply_quantization() or "
                                "calibrate_quantization() first")
@@ -160,16 +204,42 @@ class GuardedExecutor:
         self.policy = policy or GuardPolicy()
         self._kw = dict(n_i=n_i, n_l=n_l, block_h=block_h,
                         interpret=interpret)
+        golden = gate.quantized
+        self._stage_idx = {ql.info.name: i
+                           for i, ql in enumerate(golden.layers)}
+        if checkpoints is None:
+            self._boundaries: Tuple[int, ...] = ()
+        elif isinstance(checkpoints, int):
+            from . import resources as R
+            self._boundaries = R.plan_checkpoints(gate.parsed, checkpoints)
+        else:
+            self._boundaries = tuple(sorted({int(c) for c in checkpoints}))
+        # selective hardening: audit only the policy's stage subset
+        # (translated to output-tensor names, the executor's audit key)
+        if self.policy.audit_stages is None:
+            self._audit = True
+        else:
+            sel = set(self.policy.audit_stages)
+            unknown = sel - set(self._stage_idx)
+            if unknown:
+                raise ValueError(f"audit_stages name unknown stages: "
+                                 f"{sorted(unknown)}")
+            self._audit = tuple(ql.info.output for ql in golden.layers
+                                if ql.info.name in sel)
         self.x_cal = jnp.asarray(x_cal)
-        self._gold = self._make_level(gate.quantized, gate.specs)
-        qm = gate.quantized if qm is None else qm
-        if qm is gate.quantized and not faults:
+        self._gold = self._make_level(golden, gate.specs)
+        qm = golden if qm is None else qm
+        if qm is golden and not faults and not self._boundaries:
             primary_ex = self._gold.ex
         else:
-            primary_ex = pipe.make_executor(qm, audit=True, faults=faults,
-                                            **self._kw)
+            primary_ex = pipe.make_executor(
+                qm, audit=self._audit, faults=faults,
+                checkpoints=self._boundaries or None, **self._kw)
         self._primary = (qm, primary_ex)
         self._fallbacks: Dict[str, Optional[_Level]] = {}
+        #: boundary index -> jitted golden replay closure, built lazily
+        #: on first escalation and cached (like the fallback levels)
+        self._replays: Dict[int, Callable] = {}
 
     def with_program(self, qm: pipe.QuantizedModel,
                      faults: Optional[Dict] = None) -> "GuardedExecutor":
@@ -179,20 +249,29 @@ class GuardedExecutor:
         fault-injection bench sweeps trial programs through."""
         other = object.__new__(GuardedExecutor)
         other.__dict__ = dict(self.__dict__)
-        other._primary = (qm, pipe.make_executor(qm, audit=True,
-                                                 faults=faults,
-                                                 **self._kw))
+        other._primary = (qm, pipe.make_executor(
+            qm, audit=self._audit, faults=faults,
+            checkpoints=self._boundaries or None, **self._kw))
         return other
 
     # ------------------------------------------------ level construction
     def _make_level(self, qm: pipe.QuantizedModel,
                     specs: Dict[str, QuantSpec]) -> _Level:
-        ex = pipe.make_executor(qm, audit=True, **self._kw)
+        ex = pipe.make_executor(qm, audit=self._audit, **self._kw)
         tensor_m = pipe.thread_scales(qm.parsed, specs)
         _, stats = ex(self.x_cal)
         env = {t: self._dequant(t, np.asarray(s), tensor_m)
                for t, s in stats.items()}
         return _Level(qm, ex, tensor_m, GuardEnvelope(env))
+
+    def _replay_ex(self, boundary: int) -> Callable:
+        """The golden program's replay closure from one boundary: runs
+        only stages ``boundary+1 ..`` off a snapshot environment."""
+        if boundary not in self._replays:
+            self._replays[boundary] = pipe.make_executor(
+                self.gate.quantized, audit=self._audit,
+                replay_from=boundary, **self._kw)
+        return self._replays[boundary]
 
     @staticmethod
     def _dequant(tensor: str, s: np.ndarray,
@@ -247,14 +326,45 @@ class GuardedExecutor:
     def __call__(self, x) -> Tuple[jnp.ndarray, GuardReport]:
         x = jnp.asarray(x)
         qm, ex = self._primary
-        y, stats = ex(x)
+        if self._boundaries:
+            y, stats, ckpts = ex(x)
+        else:
+            (y, stats), ckpts = ex(x), {}
         audits = self._check(qm, stats, self._gold)
         flagged = [a.stage for a in audits if a.flagged]
         if not flagged:
             return y, GuardReport(flagged, audits, [], None, False, True)
         actions: List[ActionResult] = []
+        if self._boundaries and self.policy.checkpoint_replay:
+            # localize: the earliest flagged stage upper-bounds where
+            # the upset entered (audits run in schedule order); replay
+            # the GOLDEN program from the nearest snapshot before it —
+            # bit-exact vs full golden reexecution by construction,
+            # cost bounded by the downstream stage count.  A snapshot
+            # poisoned by an unflagged upstream upset re-flags on the
+            # replay's own audit below and the ladder escalates.
+            first = min(self._stage_idx[s] for s in flagged)
+            cands = [b for b in self._boundaries if b < first]
+            if cands:
+                b = max(cands)
+                bname = self.gate.quantized.layers[b].info.name
+                yr, statsr = self._replay_ex(b)(ckpts[bname])
+                fr = [a.stage
+                      for a in self._check(self._gold.qm, statsr,
+                                           self._gold) if a.flagged]
+                n_replayed = len(self.gate.quantized.layers) - (b + 1)
+                actions.append(ActionResult("checkpoint_replay", fr,
+                                            replayed=n_replayed,
+                                            boundary=bname))
+                if not fr:
+                    return yr, GuardReport(flagged, audits, actions,
+                                           "checkpoint_replay", False,
+                                           True)
         if self.policy.retry:
-            y2, stats2 = ex(x)
+            if self._boundaries:
+                y2, stats2, _ = ex(x)
+            else:
+                y2, stats2 = ex(x)
             f2 = [a.stage for a in self._check(qm, stats2, self._gold)
                   if a.flagged]
             actions.append(ActionResult("reexecute", f2))

@@ -302,12 +302,31 @@ def _stage_stats(h: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([sat, jnp.max(a), jnp.mean(a)])
 
 
+def _apply_arg_faults(h: jnp.ndarray, entry) -> jnp.ndarray:
+    """Apply a *call-time* activation-fault payload ``(idx, mask)`` to
+    one tensor: XOR ``mask[k]`` into flat element ``idx[k]``.  Unlike
+    the static ``faults=`` payload this one is a closure argument, so a
+    whole batch of sampled fault trials can be vmapped through ONE
+    compiled program (core/ser.py).  A zero mask is the identity, which
+    is how padded/no-op trial slots ride along for free."""
+    idx, mask = entry
+    flat = h.reshape(-1)
+    flat = flat.at[jnp.asarray(idx)].set(
+        jax.lax.bitwise_xor(flat[jnp.asarray(idx)],
+                            jnp.asarray(mask).astype(h.dtype)))
+    return flat.reshape(h.shape)
+
+
 def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                   block_h: Optional[int] = None,
                   interpret: Optional[bool] = None,
                   *,
-                  audit: bool = False,
-                  faults: Optional[Dict[str, Dict]] = None
+                  audit=False,
+                  faults: Optional[Dict[str, Dict]] = None,
+                  checkpoints=None,
+                  weight_args=(),
+                  fault_args=(),
+                  replay_from: Optional[int] = None
                   ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Build the whole-network fused executor: ONE jitted closure that
     interprets the DAG stage program over a tensor environment.
@@ -350,10 +369,38 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
 
     ``audit=True`` makes the closure additionally return per-stage
     int8 audit statistics (``{tensor: [sat_frac, max_abs, mean_abs]}``)
-    for the guarded-execution layer; ``faults`` injects in-flight
-    activation faults (see core/faults.py).  Both default off, and when
-    off NOTHING extra is traced — the emitted jaxpr is byte-identical
-    to the unguarded executor (probed in tests).
+    for the guarded-execution layer; a *collection* of tensor names
+    audits only those stages (selective hardening, DESIGN.md §11 —
+    the stats cost scales with the audited set).  ``faults`` injects
+    in-flight activation faults (see core/faults.py).  All hooks
+    default off, and when off NOTHING extra is traced — the emitted
+    jaxpr is byte-identical to the unguarded executor (probed in
+    tests).
+
+    Resilience hooks (all trace-time-only; DESIGN.md §11):
+
+      * ``checkpoints`` — stage indices at which the closure snapshots
+        the live int8 tensor environment (exactly what a replay needs:
+        the liveness pass guarantees the snapshot is sufficient and
+        minimal).  The closure then also returns ``{stage_name:
+        {tensor: int8 array}}``.  Boundaries inside a fused-concat
+        group (shared merge buffer under construction) are rejected.
+      * ``replay_from`` — build a *replay* closure instead: it takes a
+        checkpoint environment (as returned above) and runs only the
+        stages AFTER the given boundary index.  Recovery cost is
+        bounded by the stages downstream of the boundary, not the
+        network depth.
+      * ``weight_args`` — stage names whose staged weights become a
+        call-time argument (``ex(x, {stage: w_q})``): a batch of
+        fault-injected weight images vmaps through one compiled
+        program instead of rebuilding an executor per trial.
+      * ``fault_args`` — tensor names whose activation-fault payload
+        ``(idx, mask)`` becomes a call-time argument
+        (``ex(x, ..., {tensor: (idx, mask)})``); a zero mask is a
+        no-op slot, so fixed-shape trial batches vmap cleanly.
+
+    Return value composition (fixed order): ``logits``, then ``stats``
+    when auditing, then ``ckpts`` when checkpointing.
     """
     block_cout = max(8 * n_l, 8)
     block_cin = max(8 * n_i, 8)
@@ -368,6 +415,55 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
             last_use[t] = idx
     last_use[out_name] = len(stages)  # the egress reads it
 
+    # ---- resilience-hook configuration (all static / trace-time) ----
+    audit_sel = None if isinstance(audit, bool) else frozenset(audit)
+    want_stats = audit is not False
+
+    def _audited(t: str) -> bool:
+        return audit is True or (audit_sel is not None and t in audit_sel)
+
+    weight_arg_set = frozenset(weight_args or ())
+    weighted_names = {ql.info.name for ql in stages if ql.w_q is not None}
+    unknown_w = weight_arg_set - weighted_names
+    if unknown_w:
+        raise ValueError(f"weight_args name stages without staged "
+                         f"weights: {sorted(unknown_w)}")
+    fault_arg_set = frozenset(fault_args or ())
+    known_tensors = {ql.info.output for ql in stages} | {in_name}
+    unknown_f = fault_arg_set - known_tensors
+    if unknown_f:
+        raise ValueError(f"fault_args name unknown tensors: "
+                         f"{sorted(unknown_f)}")
+
+    ckpt_idx = tuple(sorted({int(c) for c in (checkpoints or ())}))
+    if ckpt_idx and replay_from is not None:
+        raise ValueError("checkpoints and replay_from are exclusive: a "
+                         "replay closure never snapshots")
+    for c in ckpt_idx:
+        if not 0 <= c < len(stages):
+            raise ValueError(f"checkpoint boundary {c} outside the "
+                             f"schedule [0, {len(stages)})")
+    # a boundary with a fused-concat merge buffer under construction is
+    # not a stage boundary (the buffer is not a named graph tensor)
+    name_idx = {ql.info.name: i for i, ql in enumerate(stages)}
+    for i, ql in enumerate(stages):
+        cc = ql.info.concat
+        if cc is None:
+            continue
+        c_end = name_idx[cc.name]
+        for c in ckpt_idx:
+            if i <= c < c_end:
+                raise ValueError(
+                    f"checkpoint boundary {c} lies inside fused-concat "
+                    f"group {cc.name!r} (stages {i}..{c_end}); pick a "
+                    "boundary where only named tensors are live")
+    if replay_from is not None and not -1 <= replay_from < len(stages):
+        raise ValueError(f"replay_from={replay_from} outside [-1, "
+                         f"{len(stages)})")
+    ckpt_set = frozenset(ckpt_idx)
+    has_w_arg = bool(weight_arg_set)
+    has_f_arg = bool(fault_arg_set)
+
     # concat fusion: producers need their merge's alignment shifts and
     # relu flag, which live on the (still-scheduled) Concat stage
     concat_ql = {ql.info.name: ql for ql in stages
@@ -376,16 +472,44 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     def _cbuf_key(cc: P.LayerInfo) -> str:
         return "\x00cbuf:" + cc.name
 
-    def forward(x_float: jnp.ndarray) -> jnp.ndarray:
-        scale = 2.0 ** qm.input_m
-        h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
-        if h.ndim == 4:
-            h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
-        if faults and in_name in faults:
-            h = _apply_tensor_faults(h, faults[in_name])
-        env: Dict[str, jnp.ndarray] = {in_name: h}
+    def _extra(extra):
+        """Split the optional positional tail into (weights, payload)."""
+        i = 0
+        weights = None
+        payload = None
+        if has_w_arg:
+            weights = extra[i]
+            i += 1
+        if has_f_arg:
+            payload = extra[i]
+            i += 1
+        if i != len(extra):
+            raise TypeError(f"executor expected {i} extra argument(s) "
+                            f"(weights={has_w_arg}, faults={has_f_arg}), "
+                            f"got {len(extra)}")
+        return weights, payload
+
+    def _pack(logits, stats, ckpts):
+        out = (logits,)
+        if want_stats:
+            out += (stats,)
+        if ckpt_set:
+            out += (ckpts,)
+        return out if len(out) > 1 else logits
+
+    def _run(env: Dict[str, jnp.ndarray], weights, payload, start: int):
+        """Interpret the stage program from ``start`` over a live tensor
+        environment (the shared core of the forward and replay paths)."""
         stats: Dict[str, jnp.ndarray] = {}
-        for idx, ql in enumerate(stages):
+        ckpts: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+        def _w(ql):
+            if weights is not None and ql.info.name in weight_arg_set:
+                return weights[ql.info.name]
+            return ql.w_q
+
+        for idx in range(start, len(stages)):
+            ql = stages[idx]
             li = ql.info
             if li.kind == P.CONV:
                 pool = None
@@ -419,7 +543,7 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                             cc.inputs.index(li.output)],
                         concat_relu=cc.relu)
                 h = ops.qconv2d_nhwc(
-                    env[li.inputs[0]], ql.w_q, ql.b_q,
+                    env[li.inputs[0]], _w(ql), ql.b_q,
                     strides=li.strides, pads=li.pads,
                     shift=ql.spec.requant_shift, relu=li.relu, pool=pool,
                     groups=li.group, block_cout=block_cout, block_h=block_h,
@@ -431,15 +555,20 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                     # slice (written back via a dynamic update), so the
                     # resilience layer sees fused and standalone
                     # programs the same way.
-                    if (faults and li.output in faults) or audit:
+                    has_static = bool(faults) and li.output in faults
+                    has_arg = li.output in fault_arg_set
+                    if has_static or has_arg or _audited(li.output):
                         off = li.concat_offset
                         sl = jax.lax.slice_in_dim(h, off, off + li.c_out,
                                                   axis=3)
-                        if faults and li.output in faults:
+                        if has_static:
                             sl = _apply_tensor_faults(sl, faults[li.output])
+                        if has_arg:
+                            sl = _apply_arg_faults(sl, payload[li.output])
+                        if has_static or has_arg:
                             h = jax.lax.dynamic_update_slice_in_dim(
                                 h, sl, off, axis=3)
-                        if audit:
+                        if _audited(li.output):
                             stats[li.output] = _stage_stats(sl)
                     env[_cbuf_key(li.concat)] = h
                     for t in li.inputs:  # liveness still applies
@@ -456,7 +585,7 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                 if h.ndim > 2:
                     # NHWC flatten: rows were permuted at staging time
                     h = h.reshape(h.shape[0], -1)
-                h = ops.qgemm(h, ql.w_q, ql.b_q,
+                h = ops.qgemm(h, _w(ql), ql.b_q,
                               shift=ql.spec.requant_shift,
                               relu=li.relu,
                               block_n=min(128, block_cout),
@@ -483,21 +612,48 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                 raise ValueError(li.kind)
             if faults and li.output in faults:
                 h = _apply_tensor_faults(h, faults[li.output])
-            if audit:
+            if li.output in fault_arg_set:
+                h = _apply_arg_faults(h, payload[li.output])
+            if _audited(li.output):
                 stats[li.output] = _stage_stats(h)
             env[li.output] = h
             for t in li.inputs:     # liveness-based buffer release
                 if last_use.get(t) == idx:
                     env.pop(t, None)  # pop: an operand may repeat (x + x)
+            if idx in ckpt_set:
+                # snapshot AFTER the liveness release: the environment
+                # holds exactly the live set — what a replay from this
+                # boundary needs, and nothing more
+                ckpts[li.name] = dict(env)
         h = env[out_name]
         if h.ndim == 4:
             h = jnp.transpose(h, (0, 3, 1, 2))      # single egress NHWC->NCHW
         logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
         if out_stage is not None and out_stage.softmax:
             logits = jax.nn.softmax(logits, axis=-1)
-        if audit:
-            return logits, stats
-        return logits
+        return logits, stats, ckpts
+
+    if replay_from is not None:
+        def replay(env: Dict[str, jnp.ndarray], *extra):
+            weights, payload = _extra(extra)
+            logits, stats, _ = _run(dict(env), weights, payload,
+                                    replay_from + 1)
+            return _pack(logits, stats, {})
+        return jax.jit(replay)
+
+    def forward(x_float: jnp.ndarray, *extra):
+        weights, payload = _extra(extra)
+        scale = 2.0 ** qm.input_m
+        h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
+        if h.ndim == 4:
+            h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
+        if faults and in_name in faults:
+            h = _apply_tensor_faults(h, faults[in_name])
+        if in_name in fault_arg_set:
+            h = _apply_arg_faults(h, payload[in_name])
+        env: Dict[str, jnp.ndarray] = {in_name: h}
+        logits, stats, ckpts = _run(env, weights, payload, 0)
+        return _pack(logits, stats, ckpts)
 
     return jax.jit(forward)
 

@@ -211,6 +211,106 @@ def conv_band_working_set(layers, n_l: int,
     return peak
 
 
+# ------------------------------------------ checkpoint placement model
+#
+# Stage-boundary recovery (DESIGN.md §11): the executor can snapshot the
+# live int8 tensor environment at chosen stage boundaries so the guard
+# replays only the stages downstream of a localized fault.  The snapshot
+# is exactly the executor's liveness set — the functions below mirror
+# the executor's ``last_use`` release rule byte for byte, so the DSE can
+# charge checkpoint storage against the on-chip memory quota without
+# building a program.
+
+
+def _env_liveness(parsed):
+    """(produced_at, last_use, int8_bytes) for every tensor that exists
+    in the executor's environment, mirroring ``make_executor``:
+    the graph input is produced "before stage 0" (index -1), the output
+    is read by the egress (index ``len(layers)``), and fused-concat
+    *producers* never put their output in the environment (they write a
+    channel slice of the merge's shared buffer — only the Concat stage
+    publishes the merged tensor)."""
+    layers = parsed.layers
+    last_use: Dict[str, int] = {}
+    for idx, li in enumerate(layers):
+        for t in li.inputs:
+            last_use[t] = idx
+    last_use[parsed.output_name] = len(layers)
+    produced = {parsed.input_name: -1}
+    nbytes = {parsed.input_name: int(math.prod(parsed.input_shape))}
+    for idx, li in enumerate(layers):
+        if li.concat is not None:
+            continue  # writes the shared merge buffer, not the env
+        produced[li.output] = idx
+        nbytes[li.output] = int(math.prod(li.out_shape))
+    return produced, last_use, nbytes
+
+
+def checkpoint_live_bytes(parsed, boundary: int) -> Dict[str, int]:
+    """``tensor -> int8 bytes`` of the snapshot taken after stage
+    ``boundary`` completes: every tensor produced at or before the
+    boundary whose last consumer lies strictly after it.  By the
+    executor's own liveness rule this set is both sufficient and minimal
+    for replaying stages ``boundary+1 ..``."""
+    produced, last_use, nbytes = _env_liveness(parsed)
+    return {t: nbytes[t] for t, p in produced.items()
+            if p <= boundary < last_use.get(t, -1)}
+
+
+def eligible_checkpoints(parsed) -> Tuple[int, ...]:
+    """Stage indices that are valid snapshot boundaries: everything
+    except the final stage (snapshotting after the output is produced
+    recovers nothing) and boundaries inside a fused-concat group, where
+    the half-built shared merge buffer is live but is not a named graph
+    tensor (the executor rejects those too)."""
+    layers = parsed.layers
+    name_idx = {li.name: i for i, li in enumerate(layers)}
+    blocked = set()
+    for i, li in enumerate(layers):
+        if li.concat is not None:
+            blocked.update(range(i, name_idx[li.concat.name]))
+    return tuple(i for i in range(len(layers) - 1) if i not in blocked)
+
+
+def checkpoint_bytes(parsed, boundaries) -> int:
+    """Total int8 bytes of all retained snapshots.  Snapshots are held
+    for the whole inference (any of them may be the replay source), so
+    the DSE charges their *sum*, not their max."""
+    return sum(sum(checkpoint_live_bytes(parsed, b).values())
+               for b in boundaries)
+
+
+def plan_checkpoints(parsed, k: int) -> Tuple[int, ...]:
+    """Place up to ``k`` checkpoints at equal cumulative-MAC split
+    points over the eligible boundaries (DESIGN.md §11).
+
+    The expected replay cost of a fault uniformly distributed over the
+    schedule's MACs is minimized when the boundaries split the
+    cumulative-MAC curve evenly — the j-th checkpoint targets
+    ``total_macs * j / (k+1)``.  Ties (several boundaries equally close
+    to a split point, common in merge-heavy graphs where merge stages
+    cost 0 MACs) break toward the smaller snapshot, then the earlier
+    boundary, so the plan is deterministic."""
+    elig = list(eligible_checkpoints(parsed))
+    if k <= 0 or not elig:
+        return ()
+    cum, acc = [], 0
+    for li in parsed.layers:
+        acc += li.macs
+        cum.append(acc)
+    total = max(acc, 1)
+    sizes = {b: sum(checkpoint_live_bytes(parsed, b).values())
+             for b in elig}
+    k_eff = min(k, len(elig))
+    chosen: set = set()
+    for j in range(1, k_eff + 1):
+        target = total * j / (k_eff + 1)
+        best = min((b for b in elig if b not in chosen),
+                   key=lambda b: (abs(cum[b] - target), sizes[b], b))
+        chosen.add(best)
+    return tuple(sorted(chosen))
+
+
 # ------------------------------------------------------------------- TPU
 
 @dataclasses.dataclass(frozen=True)

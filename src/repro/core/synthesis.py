@@ -299,7 +299,8 @@ class CNN2Gate:
                       qm: Optional[pipe.QuantizedModel] = None,
                       faults: Optional[Dict] = None,
                       mode: str = "emulation", n_i: int = 16,
-                      n_l: int = 32, block_h: Optional[int] = None):
+                      n_l: int = 32, block_h: Optional[int] = None,
+                      checkpoints=None):
         """Guarded-execution build (DESIGN.md §9).
 
         With ``policy=None`` guards are OFF and this returns the plain
@@ -312,7 +313,9 @@ class CNN2Gate:
         envelopes calibrated on ``x_cal`` from the *golden* program,
         plus the reexecute → unfused → per-tensor degradation ladder.
         ``qm``/``faults`` deploy a fault-injected program under the
-        guard (defaults: the golden program, no faults)."""
+        guard (defaults: the golden program, no faults);
+        ``checkpoints`` (an int K or explicit boundary indices) arms
+        the stage-boundary recovery rung (DESIGN.md §11)."""
         if self.quantized is None:
             raise RuntimeError("apply_quantization() or "
                                "calibrate_quantization() first")
@@ -328,7 +331,8 @@ class CNN2Gate:
         from . import guard as guard_mod
         return guard_mod.GuardedExecutor(
             self, x_cal, policy=policy, qm=qm, faults=faults,
-            n_i=n_i, n_l=n_l, block_h=block_h, interpret=interpret)
+            n_i=n_i, n_l=n_l, block_h=block_h, interpret=interpret,
+            checkpoints=checkpoints)
 
     # ------------------------------------------------------ latency model
     def latency_report(self, board: str, n_i: int, n_l: int) -> LatencyReport:

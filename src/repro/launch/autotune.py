@@ -61,6 +61,12 @@ def main() -> int:
     ap.add_argument("--block-h", default=None,
                     help="CNN mode: comma-separated row-band heights "
                          f"(default {DEFAULT_BLOCK_H_OPTIONS})")
+    ap.add_argument("--checkpoint-k", default=None,
+                    help="CNN mode: comma-separated candidate counts of "
+                         "stage-boundary recovery snapshots (adds the "
+                         "ckpt_k axis; snapshot bytes are charged "
+                         "against the on-chip memory quota — include 0 "
+                         "so resilience is only bought when it fits)")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--algo", default="rl", choices=["rl", "bf"])
     ap.add_argument("--axes", action="append", default=[])
@@ -99,8 +105,15 @@ def main() -> int:
         except ValueError:
             ap.error(f"--block-h must be comma-separated ints, "
                      f"got {args.block_h!r}")
+        try:
+            ck = ([int(v) for v in args.checkpoint_k.split(",")]
+                  if args.checkpoint_k else None)
+        except ValueError:
+            ap.error(f"--checkpoint-k must be comma-separated ints, "
+                     f"got {args.checkpoint_k!r}")
         space = CNNDesignSpace(parse(graph), FPGA_BOARDS[args.board],
-                               block_h_options=bh)
+                               block_h_options=bh,
+                               checkpoint_options=ck)
     else:
         space = ShardingSpace(args.arch, args.shape,
                               axes=parse_axes(args.axes),

@@ -53,7 +53,22 @@ class Server:
     marks it ``rejected``) instead of growing the queue without limit.
     A request carrying ``deadline_s`` is dropped — queued or mid-decode
     — once its deadline passes (``expired``), freeing its slot for
-    requests that can still be served in time."""
+    requests that can still be served in time.
+
+    A deployment running guarded executors (core/guard.py) next to the
+    engine reports each inference's :class:`GuardReport` through
+    :meth:`record_guard_report`; the per-outcome counters (clean /
+    checkpoint_replayed / reexecuted / fell_back / unrecovered, plus
+    ``masked`` for campaign-classified upsets the audit cannot see)
+    surface in :meth:`stats` next to the admission counters."""
+
+    #: every guarded-execution outcome the stats payload reports.
+    #: ``masked`` is never emitted by a live GuardReport (an upset the
+    #: audit never saw is invisible online); it is fed by offline SER
+    #: campaign classification (core/ser.py) when a deployment replays
+    #: campaign verdicts into its counters.
+    GUARD_OUTCOMES = ("clean", "checkpoint_replayed", "reexecuted",
+                      "fell_back", "unrecovered", "masked")
 
     def __init__(self, model: Model, params, slots: int, cache_len: int,
                  max_queue: int = 64):
@@ -68,7 +83,31 @@ class Server:
         self.queue: List[Request] = []
         self.rejected = 0
         self.expired = 0
+        self.guard_outcomes: Dict[str, int] = {
+            k: 0 for k in self.GUARD_OUTCOMES}
         self._decode = jax.jit(model.decode_step)
+
+    def record_guard_report(self, report) -> str:
+        """Count one guarded inference's outcome (a
+        :class:`~repro.core.guard.GuardReport` or a bare outcome
+        string) into the stats payload; returns the outcome key."""
+        outcome = getattr(report, "outcome", report)
+        if outcome not in self.guard_outcomes:
+            raise ValueError(f"unknown guard outcome {outcome!r} "
+                             f"(expected one of {self.GUARD_OUTCOMES})")
+        self.guard_outcomes[outcome] += 1
+        return outcome
+
+    def stats(self) -> Dict[str, Any]:
+        """The server's observable-state payload: admission counters,
+        occupancy, and the guarded-execution outcome counters."""
+        return {
+            "rejected": self.rejected,
+            "expired": self.expired,
+            "queued": len(self.queue),
+            "active": sum(r is not None for r in self.slot_req),
+            "guard": dict(self.guard_outcomes),
+        }
 
     def submit(self, req: Request) -> bool:
         if len(self.queue) >= self.max_queue:
@@ -201,9 +240,13 @@ def main(argv=None) -> int:
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {steps} engine steps)")
+    stats = server.stats()
     if server.rejected or server.expired:
-        print(f"admission: rejected={server.rejected} "
-              f"expired={server.expired}")
+        print(f"admission: rejected={stats['rejected']} "
+              f"expired={stats['expired']}")
+    if any(stats["guard"].values()):
+        print("guard: " + " ".join(f"{k}={v}" for k, v
+                                   in stats["guard"].items() if v))
     assert all(r.done for r in reqs)
     return 0
 

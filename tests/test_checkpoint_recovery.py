@@ -1,0 +1,204 @@
+"""Checkpointed stage-boundary recovery (DESIGN.md §11): executor
+snapshot/replay bit-exactness, the guard's checkpoint-replay rung on
+linear and branchy models, placement math, and the DSE's checkpoint
+memory accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import pipeline as pipe
+from repro.core import resources as R
+from repro.core.guard import GuardPolicy
+from repro.core.spaces import CNNDesignSpace
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+
+RNG = np.random.default_rng(43)
+
+STRICT = GuardPolicy(margin=0.0, sat_tol=0.0)
+
+
+def _gate(builder):
+    g = CNN2Gate.from_graph(builder(batch=1))
+    x = (RNG.standard_normal(g.parsed.input_shape) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x)
+    return g, x
+
+
+@pytest.fixture(scope="module")
+def resnet():
+    return _gate(cnn.resnet_tiny)
+
+
+@pytest.fixture(scope="module")
+def goog():
+    return _gate(cnn.googlenet_tiny)
+
+
+# ------------------------------------------------------- executor hooks
+
+def test_checkpoint_build_output_identical(resnet):
+    g, x = resnet
+    xj = jnp.asarray(x)
+    y0 = np.asarray(g.build("emulation")(xj))
+    ex = pipe.make_executor(g.quantized, interpret=True,
+                            checkpoints=R.plan_checkpoints(g.parsed, 2))
+    y, ckpts = ex(xj)
+    np.testing.assert_array_equal(np.asarray(y), y0)
+    assert len(ckpts) == 2
+
+
+def test_snapshot_matches_liveness_model(resnet):
+    """The snapshot the executor takes is exactly the liveness set the
+    resource model charges the DSE for — same tensors, same bytes."""
+    g, x = resnet
+    boundaries = R.plan_checkpoints(g.parsed, 2)
+    ex = pipe.make_executor(g.quantized, interpret=True,
+                            checkpoints=boundaries)
+    _, ckpts = ex(jnp.asarray(x))
+    names = [ql.info.name for ql in g.quantized.layers]
+    for b in boundaries:
+        snap = ckpts[names[b]]
+        model = R.checkpoint_live_bytes(g.parsed, b)
+        assert set(snap) == set(model)
+        for t, arr in snap.items():
+            assert np.asarray(arr).nbytes == model[t]
+    assert R.checkpoint_bytes(g.parsed, boundaries) == sum(
+        np.asarray(a).nbytes
+        for b in boundaries for a in ckpts[names[b]].values())
+
+
+def test_replay_bit_exact_from_every_eligible_boundary(resnet):
+    g, x = resnet
+    xj = jnp.asarray(x)
+    y0 = np.asarray(g.build("emulation")(xj))
+    elig = R.eligible_checkpoints(g.parsed)
+    ex = pipe.make_executor(g.quantized, interpret=True, checkpoints=elig)
+    _, ckpts = ex(xj)
+    names = [ql.info.name for ql in g.quantized.layers]
+    for b in elig:
+        rex = pipe.make_executor(g.quantized, interpret=True,
+                                 replay_from=b)
+        yr = rex(ckpts[names[b]])
+        np.testing.assert_array_equal(np.asarray(yr), y0)
+
+
+def test_checkpoint_inside_fused_concat_group_rejected(goog):
+    g, _ = goog
+    layers = g.parsed.layers
+    name_idx = {li.name: i for i, li in enumerate(layers)}
+    producer = next(i for i, li in enumerate(layers)
+                    if li.concat is not None)
+    c_end = name_idx[layers[producer].concat.name]
+    assert producer < c_end
+    for bad in range(producer, c_end):
+        assert bad not in R.eligible_checkpoints(g.parsed)
+    with pytest.raises(ValueError, match="fused-concat"):
+        pipe.make_executor(g.quantized, interpret=True,
+                           checkpoints=[producer])
+
+
+def test_plan_checkpoints_properties(resnet):
+    g, _ = resnet
+    elig = set(R.eligible_checkpoints(g.parsed))
+    assert R.plan_checkpoints(g.parsed, 0) == ()
+    seen = []
+    for k in (1, 2, 3, len(g.parsed.layers) + 5):
+        plan = R.plan_checkpoints(g.parsed, k)
+        assert plan == R.plan_checkpoints(g.parsed, k)  # deterministic
+        assert len(plan) == min(k, len(elig))
+        assert set(plan) <= elig
+        assert list(plan) == sorted(set(plan))
+        seen.append(plan)
+    assert R.checkpoint_bytes(g.parsed, seen[0]) <= \
+        R.checkpoint_bytes(g.parsed, seen[-1])
+
+
+# --------------------------------------------------- the recovery rung
+
+@pytest.mark.parametrize("fixture", ["resnet", "goog"])
+def test_guard_checkpoint_recovery_bit_exact(fixture, request):
+    """Acceptance: a persistent single-stage weight fault recovers
+    through the checkpoint-replay rung bit-exact against the clean
+    program, replaying strictly fewer stages than the network depth —
+    on the linear model AND the branchy fused-concat one."""
+    g, x = request.getfixturevalue(fixture)
+    xj = jnp.asarray(x)
+    clean = np.asarray(g.build("emulation")(xj))
+    depth = len(g.quantized.layers)
+    # a single flip can be architecturally masked (die inside the
+    # datapath): probe candidates until one provably reaches the output
+    last_w = [ql.info.name for ql in g.quantized.layers
+              if ql.w_q is not None][-1]
+    for index, bit in ((0, 7), (1, 7), (2, 7), (0, 6), (3, 7)):
+        plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, last_w,
+                                    index=index, bit=bit),))
+        qm_f = F.inject(g.quantized, plan)
+        y_f = np.asarray(pipe.make_executor(qm_f, interpret=True)(xj))
+        if not np.array_equal(y_f, clean):
+            break
+    else:
+        pytest.fail("no probed flip reached the output")
+    gx = g.build_guarded(x_cal=x, policy=STRICT, qm=qm_f, checkpoints=2)
+    y, report = gx(xj)
+    assert report.detected
+    assert report.recovered_by == "checkpoint_replay"
+    assert report.outcome == "checkpoint_replayed"
+    assert report.ok and not report.degraded
+    act = report.actions[0]
+    assert act.action == "checkpoint_replay" and not act.flagged
+    assert 0 < act.replayed < depth
+    np.testing.assert_array_equal(np.asarray(y), clean)
+
+
+def test_no_upstream_snapshot_falls_through_to_reexecute(resnet):
+    """A fault flagged before the first boundary has no snapshot to
+    replay from: the rung is skipped and the ladder proceeds as
+    before (reexecute, then fallback for a persistent fault)."""
+    g, x = resnet
+    first_w = next(ql.info.name for ql in g.quantized.layers
+                   if ql.w_q is not None)
+    plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, first_w, index=0, bit=6),))
+    gx = g.build_guarded(x_cal=x, policy=STRICT,
+                         qm=F.inject(g.quantized, plan), checkpoints=2)
+    y, report = gx(jnp.asarray(x))
+    assert report.detected
+    assert report.actions[0].action == "reexecute"
+    assert report.recovered_by == "unfused" and report.ok
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(g.build("emulation")(jnp.asarray(x))))
+
+
+def test_checkpoints_and_replay_from_are_exclusive(resnet):
+    g, _ = resnet
+    with pytest.raises(ValueError, match="exclusive"):
+        pipe.make_executor(g.quantized, interpret=True,
+                           checkpoints=[1], replay_from=1)
+
+
+# ------------------------------------------------- DSE memory property
+
+def test_dse_checkpoint_charge_never_exceeds_budget(resnet):
+    """Property (ISSUE satellite): for every option the DSE accepts,
+    the row-band working set PLUS the retained checkpoint bytes fit the
+    board's declared on-chip memory — resilience cannot silently
+    overcommit block RAM."""
+    g, _ = resnet
+    board = R.FPGA_BOARDS["5CSEMA5"]
+    space = CNNDesignSpace(g.parsed, board, block_h_options=[8, 16],
+                           checkpoint_options=[0, 1, 2, 4])
+    assert space.axis_names() == ["n_i", "n_l", "block_h", "ckpt_k"]
+    accepted_k = set()
+    for opt in space.options():
+        rep = space.evaluate(opt)
+        band = rep.raw["band_ws_bytes"]
+        ck = rep.raw["ckpt_bytes"]
+        assert len(rep.raw["ckpt_plan"]) == min(
+            opt[3], len(R.eligible_checkpoints(g.parsed)))
+        if rep.fits:
+            accepted_k.add(opt[3])
+            assert 8 * (band + ck) <= board.mem_bits
+            assert rep.percents["mem"] <= 100.0
+    # the axis must be a real choice on this board, not vacuous
+    assert 0 in accepted_k and any(k > 0 for k in accepted_k)

@@ -103,6 +103,55 @@ def test_per_tensor_rung_serves_degraded_output():
     assert report.ok
 
 
+@pytest.fixture(scope="module")
+def goog():
+    g = CNN2Gate.from_graph(cnn.googlenet_tiny(batch=1))
+    x = (RNG.standard_normal(g.parsed.input_shape) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x)
+    return g, x
+
+
+def test_concat_producer_fault_recovers_through_unfused_rung(goog):
+    """ISSUE satellite: corrupt a weight of a stage whose output is
+    written straight into a fused-concat merge buffer.  With no
+    checkpoints the persistent fault must ride the ladder to the
+    unfused fallback — and that fallback program must genuinely have
+    concat fusion disabled, not just be a rebuilt copy."""
+    g, x = goog
+    xj = jnp.asarray(x)
+    clean = np.asarray(g.build("emulation")(xj))
+    producers = [ql.info.name for ql in g.quantized.layers
+                 if ql.info.concat is not None and ql.w_q is not None]
+    assert producers, "googlenet_tiny must fuse at least one concat"
+    # a single flip can be masked in the datapath: probe until one
+    # provably reaches the output
+    for name in producers:
+        for index, bit in ((0, 7), (1, 7), (0, 6), (2, 7)):
+            plan = F.FaultPlan((F.Fault(F.WEIGHT_BIT, name,
+                                        index=index, bit=bit),))
+            qm_f = F.inject(g.quantized, plan)
+            y_f = np.asarray(pipe.make_executor(qm_f, interpret=True)(xj))
+            if not np.array_equal(y_f, clean):
+                break
+        else:
+            continue
+        break
+    else:
+        pytest.fail("no probed producer flip reached the output")
+    gx = g.build_guarded(x_cal=x, policy=STRICT, qm=qm_f)
+    y, report = gx(xj)
+    assert report.detected
+    assert report.actions[0].action == "reexecute"
+    assert report.recovered_by == "unfused" and report.degraded
+    assert report.ok
+    np.testing.assert_array_equal(np.asarray(y), clean)
+    lvl = gx._fallbacks["unfused"]
+    assert lvl is not None
+    assert not any(li.concat is not None or li.concat_fused
+                   for li in lvl.qm.parsed.layers), \
+        "rung 2 must disable concat fusion in the fallback program"
+
+
 def test_with_program_shares_calibration(gate):
     """The bench's re-deployment hook: a new program under the same
     envelope, no recalibration."""

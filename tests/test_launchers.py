@@ -92,6 +92,45 @@ def test_serving_sheds_load_past_queue_bound(capsys):
     assert "rejected=4" in out
 
 
+def test_server_guard_outcome_counters():
+    """ISSUE satellite: a deployment reports each guarded inference's
+    GuardReport into the server; the per-outcome counters surface in
+    the stats payload next to the admission counters."""
+    from repro.core.guard import ActionResult, GuardReport
+
+    class _StubModel:
+        def init_cache(self, slots, cache_len):
+            return None
+
+        def decode_step(self, params, cache, lengths, tokens):
+            raise NotImplementedError
+
+    srv = serve_mod.Server(_StubModel(), params=None, slots=2,
+                           cache_len=8)
+    clean = GuardReport(flagged=[], audits=[], actions=[],
+                        recovered_by=None, degraded=False, ok=True)
+    replayed = GuardReport(
+        flagged=["conv_10"], audits=[],
+        actions=[ActionResult("checkpoint_replay", [], replayed=4,
+                              boundary="conv_8")],
+        recovered_by="checkpoint_replay", degraded=False, ok=True)
+    lost = GuardReport(flagged=["conv_1"], audits=[], actions=[],
+                       recovered_by=None, degraded=True, ok=False)
+    assert srv.record_guard_report(clean) == "clean"
+    assert srv.record_guard_report(replayed) == "checkpoint_replayed"
+    assert srv.record_guard_report(lost) == "unrecovered"
+    srv.record_guard_report("masked")  # offline campaign verdict
+    srv.record_guard_report("masked")
+    stats = srv.stats()
+    assert set(stats) == {"rejected", "expired", "queued", "active",
+                          "guard"}
+    assert stats["guard"] == {"clean": 1, "checkpoint_replayed": 1,
+                              "reexecuted": 0, "fell_back": 0,
+                              "unrecovered": 1, "masked": 2}
+    with pytest.raises(ValueError, match="unknown guard outcome"):
+        srv.record_guard_report("exploded")
+
+
 def test_serving_drops_expired_requests(capsys):
     """A zero deadline expires every queued request at admission time;
     the engine drains without serving a single token."""

@@ -1,0 +1,152 @@
+"""Vectorized SER campaigns + selective hardening (core/ser.py):
+batched trial classification against the golden run, Wilson intervals,
+the vectorized recovery path, and the derived audit policy."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import pipeline as pipe
+from repro.core import ser
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def gate():
+    g = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
+    x = (RNG.standard_normal((1, 3, 32, 32)) * 0.5).astype(np.float32)
+    g.calibrate_quantization(x)
+    return g, x
+
+
+@pytest.fixture(scope="module")
+def campaign(gate):
+    g, x = gate
+    return ser.run_campaign(
+        g, x, trials=16, flips=1,
+        kinds=(F.WEIGHT_BIT, F.ACTIVATION_BIT, F.DROPPED_TILE),
+        seed=3, checkpoints=2, chunk=8)
+
+
+def test_wilson_interval():
+    lo, hi = ser.wilson(0, 0)
+    assert (lo, hi) == (0.0, 1.0)
+    lo, hi = ser.wilson(5, 10)
+    assert lo < 0.5 < hi
+    lo, hi = ser.wilson(10, 10)
+    assert lo > 0.69 and hi == 1.0
+    lo, hi = ser.wilson(0, 100)
+    assert lo == 0.0 and hi < 0.05
+    w10 = np.diff(ser.wilson(5, 10))
+    w100 = np.diff(ser.wilson(50, 100))
+    assert w100 < w10  # more trials, tighter interval
+
+
+def test_weight_and_fault_args_noop_is_golden(gate):
+    """The campaign's argument-passing executor with golden weights and
+    an all-zero XOR payload is bit-identical to the plain build — the
+    no-op padding slots really are no-ops, also under vmap."""
+    g, x = gate
+    xj = jnp.asarray(x)
+    y0 = np.asarray(g.build("emulation")(xj))
+    wnames = tuple(ql.info.name for ql in g.quantized.layers
+                   if ql.w_q is not None)[:2]
+    t0 = g.quantized.layers[0].info.output
+    ex = pipe.make_executor(g.quantized, interpret=True,
+                            weight_args=wnames, fault_args=(t0,))
+    W = {n: next(ql.w_q for ql in g.quantized.layers
+                 if ql.info.name == n) for n in wnames}
+    nop = {t0: (np.zeros(2, np.int32), np.zeros(2, np.int8))}
+    np.testing.assert_array_equal(np.asarray(ex(xj, W, nop)), y0)
+    vex = jax.vmap(ex, in_axes=(None, None, 0))
+    batch = {t0: (np.zeros((3, 2), np.int32), np.zeros((3, 2), np.int8))}
+    ys = np.asarray(vex(xj, W, batch))
+    for i in range(3):
+        np.testing.assert_array_equal(ys[i], y0)
+
+
+def test_campaign_outcomes_partition_trials(campaign):
+    c = campaign
+    counts = c.counts()
+    assert counts["detected"] + counts["masked"] + counts["silent"] \
+        == c.trials == 16
+    assert counts["silent"] == 0
+    for r in c.records:
+        assert r.outcome in ("detected", "masked", "silent")
+        if r.outcome == "detected":
+            assert r.recovered
+            assert 0 < r.replayed <= c.n_stages
+            if not r.escalated:
+                assert r.replayed < c.n_stages
+        else:
+            assert not r.recovered and r.replayed == 0
+
+
+def test_campaign_summary_is_json_with_cis(campaign):
+    s = campaign.summary()
+    doc = json.loads(json.dumps(s))  # JSON-serializable end to end
+    assert doc["version"] == ser.SCHEMA_VERSION
+    assert doc["trials"] == 16
+    for key in ("detected", "masked", "silent", "recovered"):
+        r = doc["rates"][key]
+        assert 0.0 <= r["lo"] <= r["p"] <= r["hi"] <= 1.0
+    for st in doc["per_stage"].values():
+        assert st["trials"] >= 1
+        assert st["avf"]["hi"] <= 1.0
+
+
+def test_campaign_rejects_unvectorizable_kinds(gate):
+    g, x = gate
+    with pytest.raises(ValueError, match="vectorized"):
+        ser.run_campaign(g, x, trials=2, kinds=(F.SCALE,))
+
+
+def test_derived_policy_covers_every_reached_trial(gate, campaign):
+    g, _ = gate
+    pol = ser.derive_guard_policy([campaign], g.parsed)
+    sel = set(pol.audit_stages)
+    assert g.parsed.layers[-1].name in sel  # output always certified
+    assert len(sel) < len(g.parsed.layers)  # actually selective
+    for r in campaign.records:
+        if r.output_differs:
+            assert set(r.flagged) & sel, \
+                f"trial {r.plan.seed} uncovered by {sorted(sel)}"
+
+
+def test_selective_policy_still_detects_and_recovers(gate, campaign):
+    """End to end: deploy the derived (subset-audit) policy with
+    checkpoints against a campaign fault — still detected, still
+    recovered bit-exact."""
+    g, x = gate
+    pol = ser.derive_guard_policy([campaign], g.parsed)
+    rec = next(r for r in campaign.records
+               if r.outcome == "detected" and r.plan.program_faults
+               and set(r.flagged) & set(pol.audit_stages))
+    gx = g.build_guarded(x_cal=x, policy=pol,
+                         qm=F.inject(g.quantized, rec.plan),
+                         checkpoints=2)
+    y, report = gx(jnp.asarray(x))
+    assert report.detected and report.ok
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(g.build("emulation")(jnp.asarray(x))))
+
+
+def test_derive_policy_refuses_silent_evidence(gate, campaign):
+    g, _ = gate
+    import dataclasses
+    bad = dataclasses.replace(campaign) if False else ser.Campaign(
+        model=campaign.model, flips=1, kinds=campaign.kinds, seed=0,
+        boundaries=campaign.boundaries,
+        boundary_names=campaign.boundary_names,
+        n_stages=campaign.n_stages,
+        records=[ser.TrialRecord(plan=F.FaultPlan(()), stages=("conv_1",),
+                                 flagged=(), outcome="silent",
+                                 output_differs=True)])
+    with pytest.raises(ValueError, match="silent"):
+        ser.derive_guard_policy([bad], g.parsed)
