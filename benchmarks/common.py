@@ -1,6 +1,8 @@
 """Shared helpers for the benchmark harness."""
 import json
 import os
+import platform
+import subprocess
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -13,27 +15,74 @@ ROWS: List[Tuple[str, float, str]] = []
 #: across PRs without digging through results/.
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+#: keys every BENCH_*.json env block must carry — write_bench_json
+#: refuses to ship a file missing any of them, so the trajectory stays
+#: joinable across PRs.
+ENV_REQUIRED_KEYS = ("jax_version", "backend", "devices", "device_count",
+                     "git_rev", "host")
+
+
+def _git_rev() -> str:
+    """Current commit hash (short), or "unknown" outside a git checkout
+    — bench files must still write from exported tarballs."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=5)
+        if out.returncode == 0:
+            rev = out.stdout.strip()
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], cwd=REPO_ROOT,
+                capture_output=True, text=True, timeout=5)
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                rev += "-dirty"
+            return rev
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    return "unknown"
+
 
 def bench_env() -> Dict[str, object]:
     """Environment metadata stamped into every BENCH_*.json: perf
-    numbers are meaningless across PRs without the jax version and the
-    device they ran on."""
+    numbers are meaningless across PRs without the jax version, the
+    device they ran on, and the revision that produced them."""
     import jax
     return {
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "devices": [str(d) for d in jax.devices()],
         "device_count": len(jax.devices()),
+        "git_rev": _git_rev(),
+        "host": {
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+            "node": platform.node(),
+        },
     }
 
 
 def write_bench_json(name: str, results: Dict[str, object]) -> str:
     """Write the top-level ``BENCH_<name>.json`` trajectory file
-    (results + environment metadata).  Returns the path."""
+    (results + environment metadata).  Returns the path.
+
+    Every bench writer routes through here, so this is the one place
+    the schema is enforced: the env block must carry
+    :data:`ENV_REQUIRED_KEYS` and ``results`` must be a
+    JSON-serializable dict (checked by serializing before the file is
+    opened — a half-written BENCH file is worse than none).
+    """
+    if not isinstance(results, dict):
+        raise TypeError(f"results must be a dict, got {type(results).__name__}")
+    env = bench_env()
+    missing = [k for k in ENV_REQUIRED_KEYS if k not in env]
+    if missing:
+        raise ValueError(f"bench_env() missing required keys: {missing}")
+    doc = {"bench": name, "env": env, "results": results}
+    blob = json.dumps(doc, indent=1)     # serialize first, then write
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"bench": name, "env": bench_env(),
-                   "results": results}, f, indent=1)
+        f.write(blob)
     return path
 
 

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import telemetry as tele
 from .resources import ResourceReport
 
 BETA = 0.01     # reward scale (percent -> [0, 1]), §4.4
@@ -150,7 +151,13 @@ class RobustEvaluator(DesignSpace):
         JSON object) are migrated in place on first load.
 
     ``stats`` counts evaluated / journal_hits / retries / errors /
-    timeouts / quarantined / journal_dropped for reporting.
+    timeouts / quarantined / journal_dropped for reporting.  Every
+    count is mirrored into the telemetry registry (``dse.evaluated``,
+    ``dse.quarantined``, ... — DESIGN.md §12) and each underlying
+    ``evaluate`` runs inside a ``dse.evaluate`` span carrying the
+    option, so a ``--robust`` sweep's retry/timeout/quarantine totals
+    show up in any profile snapshot without parsing the autotune
+    payload.
     """
 
     QUOTAS = ("lut", "dsp", "mem", "reg")
@@ -161,13 +168,18 @@ class RobustEvaluator(DesignSpace):
                  retries: int = 2,
                  backoff_s: float = 0.05,
                  journal_path: Optional[str] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 registry: Optional[tele.MetricsRegistry] = None,
+                 tracer: Optional[tele.Tracer] = None):
         self.space = space
         self.timeout_s = timeout_s
         self.retries = max(0, retries)
         self.backoff_s = backoff_s
         self.journal_path = journal_path
         self._rng = np.random.default_rng(seed)
+        self._registry = registry if registry is not None \
+            else tele.get_registry()
+        self._tracer = tracer if tracer is not None else tele.get_tracer()
         self.completed: Dict[str, dict] = {}
         self.quarantined: Dict[str, str] = {}
         self.stats = {"evaluated": 0, "journal_hits": 0, "retries": 0,
@@ -175,6 +187,13 @@ class RobustEvaluator(DesignSpace):
                       "journal_dropped": 0}
         if journal_path and os.path.exists(journal_path):
             self._load_journal()
+
+    def _count(self, key: str, n: int = 1) -> None:
+        """One robustness event: the local stats dict AND the registry
+        counter move together, so the autotune payload and any profile
+        snapshot agree."""
+        self.stats[key] += n
+        self._registry.counter(f"dse.{key}").inc(n)
 
     # ------------------------------------------------ space delegation
     def options(self) -> List[Tuple]:
@@ -223,31 +242,34 @@ class RobustEvaluator(DesignSpace):
     def evaluate(self, option: Tuple) -> ResourceReport:
         key = self._key(option)
         if key in self.completed:
-            self.stats["journal_hits"] += 1
+            self._count("journal_hits")
             rec = self.completed[key]
             return ResourceReport(percents=dict(rec["percents"]),
                                   raw=dict(rec["raw"]),
                                   fits=bool(rec["fits"]))
         if key in self.quarantined:
-            self.stats["journal_hits"] += 1
+            self._count("journal_hits")
             return self._failed()
         last: Optional[BaseException] = None
         for attempt in range(self.retries + 1):
             if attempt:
-                self.stats["retries"] += 1
+                self._count("retries")
                 jitter = 1.0 + float(self._rng.random())
                 time.sleep(self.backoff_s * (2 ** (attempt - 1)) * jitter)
             try:
-                rep = self._attempt(option)
+                with self._tracer.span("dse.evaluate", cat="dse",
+                                       args={"option": key,
+                                             "attempt": attempt}):
+                    rep = self._attempt(option)
             except EvalTimeout as e:
-                self.stats["timeouts"] += 1
+                self._count("timeouts")
                 last = e
                 break  # hangs are not retried — see class docstring
             except Exception as e:
-                self.stats["errors"] += 1
+                self._count("errors")
                 last = e
                 continue
-            self.stats["evaluated"] += 1
+            self._count("evaluated")
             rec = {"percents": rep.percents, "raw": rep.raw,
                    "fits": rep.fits}
             self.completed[key] = rec
@@ -255,7 +277,7 @@ class RobustEvaluator(DesignSpace):
             return rep
         why = f"{type(last).__name__}: {last}"
         self.quarantined[key] = why
-        self.stats["quarantined"] += 1
+        self._count("quarantined")
         self._append({"kind": "quarantined", "key": key, "why": why})
         return self._failed()
 
@@ -308,7 +330,7 @@ class RobustEvaluator(DesignSpace):
                     break
         if dropped:
             os.replace(self.journal_path, self.journal_path + ".corrupt")
-            self.stats["journal_dropped"] += dropped
+            self._count("journal_dropped", dropped)
         # persist migration/recovery so the next crash tears v2 lines,
         # not a half-migrated hybrid
         self._rewrite_journal()

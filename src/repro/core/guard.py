@@ -54,6 +54,7 @@ import numpy as np
 
 from . import parser as P
 from . import pipeline as pipe
+from . import telemetry as tele
 from .quantize import QuantSpec
 
 
@@ -196,12 +197,20 @@ class GuardedExecutor:
                  block_h: Optional[int] = None,
                  interpret: Optional[bool] = True,
                  faults: Optional[Dict] = None,
-                 checkpoints=None):
+                 checkpoints=None,
+                 registry: Optional[tele.MetricsRegistry] = None,
+                 tracer: Optional[tele.Tracer] = None):
         if gate.quantized is None or gate.specs is None:
             raise RuntimeError("apply_quantization() or "
                                "calibrate_quantization() first")
         self.gate = gate
         self.policy = policy or GuardPolicy()
+        # telemetry (DESIGN.md §12): rung spans + outcome counters go
+        # to the process-default sinks unless the deployment passes its
+        # own (e.g. the serve loop sharing one registry per replica)
+        self._registry = registry if registry is not None \
+            else tele.get_registry()
+        self._tracer = tracer if tracer is not None else tele.get_tracer()
         self._kw = dict(n_i=n_i, n_l=n_l, block_h=block_h,
                         interpret=interpret)
         golden = gate.quantized
@@ -324,12 +333,26 @@ class GuardedExecutor:
 
     # --------------------------------------------------------- inference
     def __call__(self, x) -> Tuple[jnp.ndarray, GuardReport]:
+        """Guarded inference: the primary run, the ladder, and the
+        telemetry trail — one ``guard.infer`` span nesting a span per
+        rung, plus ``guard.outcome.*`` / ``guard.rung.*`` registry
+        counters (DESIGN.md §12)."""
+        with self._tracer.span("guard.infer", cat="guard",
+                               args={"model": self.gate.parsed.name}):
+            y, report = self._infer(x)
+        self._registry.counter(f"guard.outcome.{report.outcome}").inc()
+        for act in report.actions:
+            self._registry.counter(f"guard.rung.{act.action}").inc()
+        return y, report
+
+    def _infer(self, x) -> Tuple[jnp.ndarray, GuardReport]:
         x = jnp.asarray(x)
         qm, ex = self._primary
-        if self._boundaries:
-            y, stats, ckpts = ex(x)
-        else:
-            (y, stats), ckpts = ex(x), {}
+        with self._tracer.span("guard.primary", cat="guard"):
+            if self._boundaries:
+                y, stats, ckpts = ex(x)
+            else:
+                (y, stats), ckpts = ex(x), {}
         audits = self._check(qm, stats, self._gold)
         flagged = [a.stage for a in audits if a.flagged]
         if not flagged:
@@ -348,11 +371,15 @@ class GuardedExecutor:
             if cands:
                 b = max(cands)
                 bname = self.gate.quantized.layers[b].info.name
-                yr, statsr = self._replay_ex(b)(ckpts[bname])
+                n_replayed = len(self.gate.quantized.layers) - (b + 1)
+                with self._tracer.span("guard.rung.checkpoint_replay",
+                                       cat="guard",
+                                       args={"boundary": bname,
+                                             "replayed": n_replayed}):
+                    yr, statsr = self._replay_ex(b)(ckpts[bname])
                 fr = [a.stage
                       for a in self._check(self._gold.qm, statsr,
                                            self._gold) if a.flagged]
-                n_replayed = len(self.gate.quantized.layers) - (b + 1)
                 actions.append(ActionResult("checkpoint_replay", fr,
                                             replayed=n_replayed,
                                             boundary=bname))
@@ -361,10 +388,11 @@ class GuardedExecutor:
                                            "checkpoint_replay", False,
                                            True)
         if self.policy.retry:
-            if self._boundaries:
-                y2, stats2, _ = ex(x)
-            else:
-                y2, stats2 = ex(x)
+            with self._tracer.span("guard.rung.reexecute", cat="guard"):
+                if self._boundaries:
+                    y2, stats2, _ = ex(x)
+                else:
+                    y2, stats2 = ex(x)
             f2 = [a.stage for a in self._check(qm, stats2, self._gold)
                   if a.flagged]
             actions.append(ActionResult("reexecute", f2))
@@ -379,7 +407,9 @@ class GuardedExecutor:
             lvl = self._fallback(name)
             if lvl is None:
                 continue
-            yl, statsl = lvl.ex(x)
+            with self._tracer.span(f"guard.rung.fallback:{name}",
+                                   cat="guard"):
+                yl, statsl = lvl.ex(x)
             fl = [a.stage for a in self._check(lvl.qm, statsl, lvl)
                   if a.flagged]
             actions.append(ActionResult(f"fallback:{name}", fl))

@@ -30,6 +30,7 @@ enqueueing one fused command queue.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -326,7 +327,9 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                   checkpoints=None,
                   weight_args=(),
                   fault_args=(),
-                  replay_from: Optional[int] = None
+                  replay_from: Optional[int] = None,
+                  stage_timed: bool = False,
+                  tracer=None
                   ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Build the whole-network fused executor: ONE jitted closure that
     interprets the DAG stage program over a tensor environment.
@@ -399,6 +402,25 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
         (``ex(x, ..., {tensor: (idx, mask)})``); a zero mask is a
         no-op slot, so fixed-shape trial batches vmap cleanly.
 
+    ``stage_timed=True`` builds the **stage-timed executor** instead
+    (DESIGN.md §12): every DAG stage (plus the ingress quantize and the
+    egress dequant) is compiled as its OWN jitted sub-closure over the
+    live tensor environment, and the returned callable runs them in
+    schedule order with ``jax.block_until_ready`` between stages —
+    measured per-stage wall time, the attribution input
+    ``launch/profile.py`` joins against the analytical cost models.
+    Returns ``(logits, timings)`` where ``timings`` is a schedule-order
+    list of ``{"stage", "kind", "wall_us"}`` rows; an optional
+    ``tracer`` (:class:`repro.core.telemetry.Tracer`) additionally
+    records each stage as a trace span.  Numerics are identical to the
+    fused closure (same stage program, same kernels); only the jit
+    boundary moves, so per-stage times include each sub-closure's
+    dispatch and device sync — honest about what stage-at-a-time
+    execution costs, which is exactly the quantity the fused/stagewise
+    benchmarks compare.  Exclusive with every other hook, and
+    trace-time-only: ``stage_timed=False`` (the default) traces the
+    byte-identical whole-network program.
+
     Return value composition (fixed order): ``logits``, then ``stats``
     when auditing, then ``ckpts`` when checkpointing.
     """
@@ -418,6 +440,13 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     # ---- resilience-hook configuration (all static / trace-time) ----
     audit_sel = None if isinstance(audit, bool) else frozenset(audit)
     want_stats = audit is not False
+    if stage_timed and (want_stats or faults or checkpoints
+                        or weight_args or fault_args
+                        or replay_from is not None):
+        raise ValueError(
+            "stage_timed is exclusive with the audit/faults/checkpoints/"
+            "weight_args/fault_args/replay_from hooks: the stage-timed "
+            "executor measures the plain program")
 
     def _audited(t: str) -> bool:
         return audit is True or (audit_sel is not None and t in audit_sel)
@@ -497,18 +526,18 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
             out += (ckpts,)
         return out if len(out) > 1 else logits
 
-    def _run(env: Dict[str, jnp.ndarray], weights, payload, start: int):
-        """Interpret the stage program from ``start`` over a live tensor
-        environment (the shared core of the forward and replay paths)."""
-        stats: Dict[str, jnp.ndarray] = {}
-        ckpts: Dict[str, Dict[str, jnp.ndarray]] = {}
+    def _exec_stages(env: Dict[str, jnp.ndarray], weights, payload,
+                     start: int, stop: int, stats, ckpts) -> None:
+        """Interpret stages ``[start, stop)`` over a live tensor
+        environment, mutating ``env``/``stats``/``ckpts`` in place —
+        the shared core of the forward, replay and stage-timed paths."""
 
         def _w(ql):
             if weights is not None and ql.info.name in weight_arg_set:
                 return weights[ql.info.name]
             return ql.w_q
 
-        for idx in range(start, len(stages)):
+        for idx in range(start, stop):
             ql = stages[idx]
             li = ql.info
             if li.kind == P.CONV:
@@ -625,13 +654,37 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
                 # holds exactly the live set — what a replay from this
                 # boundary needs, and nothing more
                 ckpts[li.name] = dict(env)
+
+    def _egress(env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         h = env[out_name]
         if h.ndim == 4:
             h = jnp.transpose(h, (0, 3, 1, 2))      # single egress NHWC->NCHW
         logits = h.astype(jnp.float32) * (2.0 ** -qm.output_m)
         if out_stage is not None and out_stage.softmax:
             logits = jax.nn.softmax(logits, axis=-1)
-        return logits, stats, ckpts
+        return logits
+
+    def _run(env: Dict[str, jnp.ndarray], weights, payload, start: int):
+        stats: Dict[str, jnp.ndarray] = {}
+        ckpts: Dict[str, Dict[str, jnp.ndarray]] = {}
+        _exec_stages(env, weights, payload, start, len(stages),
+                     stats, ckpts)
+        return _egress(env), stats, ckpts
+
+    def _ingress(x_float: jnp.ndarray, payload) -> jnp.ndarray:
+        scale = 2.0 ** qm.input_m
+        h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
+        if h.ndim == 4:
+            h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
+        if faults and in_name in faults:
+            h = _apply_tensor_faults(h, faults[in_name])
+        if in_name in fault_arg_set:
+            h = _apply_arg_faults(h, payload[in_name])
+        return h
+
+    if stage_timed:
+        return _make_stage_timed(qm, stages, in_name, _ingress,
+                                 _exec_stages, _egress, tracer)
 
     if replay_from is not None:
         def replay(env: Dict[str, jnp.ndarray], *extra):
@@ -643,19 +696,67 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
 
     def forward(x_float: jnp.ndarray, *extra):
         weights, payload = _extra(extra)
-        scale = 2.0 ** qm.input_m
-        h = jnp.clip(jnp.round(x_float * scale), -128, 127).astype(jnp.int8)
-        if h.ndim == 4:
-            h = jnp.transpose(h, (0, 2, 3, 1))      # single ingress NCHW->NHWC
-        if faults and in_name in faults:
-            h = _apply_tensor_faults(h, faults[in_name])
-        if in_name in fault_arg_set:
-            h = _apply_arg_faults(h, payload[in_name])
+        h = _ingress(x_float, payload)
         env: Dict[str, jnp.ndarray] = {in_name: h}
         logits, stats, ckpts = _run(env, weights, payload, 0)
         return _pack(logits, stats, ckpts)
 
     return jax.jit(forward)
+
+
+def _make_stage_timed(qm: QuantizedModel, stages, in_name: str,
+                      ingress: Callable, exec_stages: Callable,
+                      egress: Callable, tracer) -> Callable:
+    """Assemble the stage-timed executor (``make_executor(
+    stage_timed=True)``): one jitted sub-closure per DAG stage over the
+    live tensor environment, run in schedule order with a device sync
+    between stages so each stage's wall time is attributable.  Ingress
+    (quantize + layout) and egress (dequant + softmax) are timed as
+    their own pseudo-stages — they are real work the fused closure also
+    pays, and the attribution report should see 100 % of the wall."""
+
+    def _stage_fn(idx: int) -> Callable:
+        def f(env: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+            env = dict(env)
+            exec_stages(env, None, None, idx, idx + 1, {}, {})
+            return env
+        return jax.jit(f)
+
+    stage_fns = [_stage_fn(i) for i in range(len(stages))]
+    ingress_fn = jax.jit(lambda x: ingress(x, None))
+    egress_fn = jax.jit(egress)
+
+    def timed(x_float: jnp.ndarray):
+        timings: List[Dict[str, object]] = []
+
+        def _t0():
+            return (time.perf_counter(),
+                    tracer.now_us() if tracer is not None else 0.0)
+
+        def _rec(name: str, kind: str, t0, ts_us) -> None:
+            dur_us = (time.perf_counter() - t0) * 1e6
+            timings.append({"stage": name, "kind": kind,
+                            "wall_us": dur_us})
+            if tracer is not None:
+                tracer.add_span(name, ts_us, dur_us, cat="stage",
+                                args={"kind": kind,
+                                      "model": qm.name})
+
+        t0, ts = _t0()
+        h = jax.block_until_ready(ingress_fn(x_float))
+        _rec("ingress", "ingress", t0, ts)
+        env: Dict[str, jnp.ndarray] = {in_name: h}
+        for idx, fn in enumerate(stage_fns):
+            li = stages[idx].info
+            t0, ts = _t0()
+            env = jax.block_until_ready(fn(env))
+            _rec(li.name, li.kind, t0, ts)
+        t0, ts = _t0()
+        logits = jax.block_until_ready(egress_fn(env))
+        _rec("egress", "egress", t0, ts)
+        return logits, timings
+
+    return timed
 
 
 def run_int8(qm: QuantizedModel, x_float: jnp.ndarray,

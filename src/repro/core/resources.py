@@ -365,6 +365,42 @@ def tpu_report_from_compiled(compiled, profile: TPUProfile = TPU_V5E,
     return ResourceReport(percents=percents, raw=raw, fits=fits)
 
 
+# ------------------------------------------- per-stage modeled costs
+
+def modeled_stage_costs(parsed, profile: "FPGAProfile", n_i: int,
+                        n_l: int, block_h: Optional[int] = None,
+                        per_channel: bool = False) -> Dict[str, Dict]:
+    """Per-stage analytical costs in schedule order — the model side of
+    the attribution join (``launch/profile.py``, DESIGN.md §12).
+
+    For every scheduled stage: the Table-1 latency split
+    (``model_s``/``t_compute_s``/``t_memory_s`` from
+    :func:`fpga_layer_time_s`), the modeled DDR traffic
+    (``ddr_bytes`` = input + weight + output bytes from
+    ``pipeline.layer_bytes`` — fused merges report the bytes the fusion
+    actually moves), the stage's row-band working set (``vmem_bytes``
+    from :func:`conv_band_working_set` scored on that stage alone;
+    zero for stages the band model does not charge) and its ``macs``.
+    Keyed by stage name so measured wall times join by name.
+    """
+    from . import pipeline as pipe  # resources never imports at top: no cycle
+
+    out: Dict[str, Dict] = {}
+    for li in parsed.layers:
+        in_b, w_b, out_b = pipe.layer_bytes(li)
+        t, tc, tm = fpga_layer_time_s(profile, n_i, n_l, li.macs,
+                                      in_b, w_b, out_b)
+        out[li.name] = {
+            "kind": li.kind,
+            "model_s": t, "t_compute_s": tc, "t_memory_s": tm,
+            "ddr_bytes": in_b + w_b + out_b,
+            "vmem_bytes": conv_band_working_set(
+                [li], n_l, block_h, n_i=n_i, per_channel=per_channel),
+            "macs": li.macs,
+        }
+    return out
+
+
 # ------------------------------------------------- FPGA latency model
 
 def fpga_layer_time_s(profile: FPGAProfile, n_i: int, n_l: int,

@@ -161,11 +161,16 @@ def main() -> int:
                 for o, f, ok in res.history],
         }
         if robust is not None:
+            from repro.core import telemetry as tele
             payload["robust"] = {
                 "stats": robust.stats,
                 "quarantined": [
                     {"option": dict(zip(names, o)), "reason": why}
                     for o, why in robust.quarantined_options()],
+                # registry mirror of the stats (dse.* counters plus
+                # whatever else incremented this process) — same shape
+                # as BENCH_profile.json's telemetry block
+                "telemetry": tele.get_registry().snapshot(),
             }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1, default=str)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import telemetry as tele
 from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
@@ -34,6 +35,7 @@ class Request:
         self.max_new = max_new
         self.deadline_s = deadline_s
         self.submitted_at: Optional[float] = None
+        self.span_ts_us: Optional[float] = None   # tracer-epoch submit time
         self.output: List[int] = []
         self.done = False
         self.rejected = False          # shed at admission (queue full)
@@ -71,7 +73,9 @@ class Server:
                       "fell_back", "unrecovered", "masked")
 
     def __init__(self, model: Model, params, slots: int, cache_len: int,
-                 max_queue: int = 64):
+                 max_queue: int = 64,
+                 registry: Optional[tele.MetricsRegistry] = None,
+                 tracer: Optional[tele.Tracer] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -86,6 +90,36 @@ class Server:
         self.guard_outcomes: Dict[str, int] = {
             k: 0 for k in self.GUARD_OUTCOMES}
         self._decode = jax.jit(model.decode_step)
+        # telemetry (DESIGN.md §12): per-request spans, a queue-depth
+        # gauge and an end-to-end latency histogram — p50/p95/p99 and
+        # tokens/s in stats() derive from these
+        self._registry = registry if registry is not None \
+            else tele.get_registry()
+        self._tracer = tracer if tracer is not None else tele.get_tracer()
+        self._latency = self._registry.histogram("serve.request_latency_s")
+        self._tokens = self._registry.counter("serve.tokens")
+        self._queue_depth = self._registry.gauge("serve.queue_depth")
+        self._active_slots = self._registry.gauge("serve.active_slots")
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def _finish(self, req: Request, outcome: str) -> None:
+        """Single completion point: every request that was admitted
+        leaves through here exactly once (completed or expired), so the
+        latency histogram and the per-request span can't drift from the
+        admission counters."""
+        req.done = True
+        now = time.monotonic()
+        self._t_last = now
+        if req.submitted_at is not None:
+            latency = now - req.submitted_at
+            self._latency.record(latency)
+            if req.span_ts_us is not None:
+                self._tracer.add_span(
+                    f"serve.request:{req.rid}", req.span_ts_us,
+                    latency * 1e6, cat="serve",
+                    args={"rid": req.rid, "outcome": outcome,
+                          "tokens": len(req.output)})
 
     def record_guard_report(self, report) -> str:
         """Count one guarded inference's outcome (a
@@ -100,13 +134,25 @@ class Server:
 
     def stats(self) -> Dict[str, Any]:
         """The server's observable-state payload: admission counters,
-        occupancy, and the guarded-execution outcome counters."""
+        occupancy, the guarded-execution outcome counters, and the
+        telemetry-derived latency percentiles + throughput."""
+        h = self._latency
+        span = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
         return {
             "rejected": self.rejected,
             "expired": self.expired,
             "queued": len(self.queue),
             "active": sum(r is not None for r in self.slot_req),
             "guard": dict(self.guard_outcomes),
+            "latency_s": {"count": h.count, "mean": h.mean,
+                          "p50": h.percentile(50),
+                          "p95": h.percentile(95),
+                          "p99": h.percentile(99)},
+            "tokens": self._tokens.value,
+            "tokens_per_s": (self._tokens.value / span if span > 0
+                             else None),
         }
 
     def submit(self, req: Request) -> bool:
@@ -114,9 +160,14 @@ class Server:
             req.rejected = True
             req.done = True
             self.rejected += 1
+            self._registry.counter("serve.rejected").inc()
             return False
         req.submitted_at = time.monotonic()
+        if self._t_first is None:
+            self._t_first = req.submitted_at
+        req.span_ts_us = self._tracer.now_us()
         self.queue.append(req)
+        self._queue_depth.set(len(self.queue))
         return True
 
     def _admit(self) -> None:
@@ -125,11 +176,13 @@ class Server:
         for req in self.queue:
             if req.past_deadline(now):
                 req.expired = True
-                req.done = True
                 self.expired += 1
+                self._registry.counter("serve.expired").inc()
+                self._finish(req, "expired")
             else:
                 live.append(req)
         self.queue = live
+        self._queue_depth.set(len(self.queue))
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
@@ -161,10 +214,12 @@ class Server:
         for s, req in enumerate(self.slot_req):
             if req is not None and req.past_deadline(now):
                 req.expired = True
-                req.done = True
                 self.slot_req[s] = None
                 self.lengths[s] = 0
                 self.expired += 1
+                self._registry.counter("serve.expired").inc()
+                self._finish(req, "expired")
+        self._active_slots.set(sum(r is not None for r in self.slot_req))
         tokens = np.zeros((self.slots, 1), np.int32)
         active = []
         for s, req in enumerate(self.slot_req):
@@ -185,11 +240,13 @@ class Server:
             req = self.slot_req[s]
             self.lengths[s] += 1
             req.output.append(int(nxt[s]))
+            self._tokens.inc()
             if (len(req.output) >= req.max_new
                     or self.lengths[s] >= self.cache_len - 1):
-                req.done = True
                 self.slot_req[s] = None
                 self.lengths[s] = 0
+                self._registry.counter("serve.completed").inc()
+                self._finish(req, "completed")
 
     @property
     def busy(self) -> bool:
@@ -241,6 +298,16 @@ def main(argv=None) -> int:
     print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {steps} engine steps)")
     stats = server.stats()
+    lat = stats["latency_s"]
+
+    def _ms(v):
+        return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
+
+    tps = stats["tokens_per_s"]
+    print(f"latency: p50={_ms(lat['p50'])} p95={_ms(lat['p95'])} "
+          f"p99={_ms(lat['p99'])} over {lat['count']} requests; "
+          f"telemetry tokens/s="
+          f"{f'{tps:.1f}' if tps is not None else 'n/a'}")
     if server.rejected or server.expired:
         print(f"admission: rejected={stats['rejected']} "
               f"expired={stats['expired']}")

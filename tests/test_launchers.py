@@ -123,12 +123,42 @@ def test_server_guard_outcome_counters():
     srv.record_guard_report("masked")
     stats = srv.stats()
     assert set(stats) == {"rejected", "expired", "queued", "active",
-                          "guard"}
+                          "guard", "latency_s", "tokens",
+                          "tokens_per_s"}
     assert stats["guard"] == {"clean": 1, "checkpoint_replayed": 1,
                               "reexecuted": 0, "fell_back": 0,
                               "unrecovered": 1, "masked": 2}
     with pytest.raises(ValueError, match="unknown guard outcome"):
         srv.record_guard_report("exploded")
+
+
+def test_serving_reports_latency_percentiles(capsys):
+    """ISSUE satellite: the serving summary surfaces p50/p95/p99 request
+    latency and tokens/s from the telemetry histogram."""
+    from repro.core import telemetry as tele
+
+    tele.reset()
+    try:
+        rc = serve_mod.main(["--arch", "qwen2-1.5b", "--preset", "smoke",
+                             "--slots", "2", "--requests", "3",
+                             "--prompt-len", "4", "--max-new", "4",
+                             "--cache-len", "32"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "latency: p50=" in out and "p99=" in out
+        assert "tokens/s=" in out
+        snap = tele.get_registry().snapshot()
+        hist = snap["histograms"]["serve.request_latency_s"]
+        assert hist["count"] == 3
+        assert hist["p50"] is not None
+        assert snap["counters"]["serve.completed"] == 3
+        # each completed request produced a span
+        reqs = [e for e in tele.get_tracer().events()
+                if e["name"].startswith("serve.request:")]
+        assert len(reqs) == 3
+        assert all(e["args"]["outcome"] == "completed" for e in reqs)
+    finally:
+        tele.reset()
 
 
 def test_serving_drops_expired_requests(capsys):
