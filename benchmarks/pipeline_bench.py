@@ -13,7 +13,6 @@ import json
 import os
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import parser as P

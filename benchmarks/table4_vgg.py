@@ -19,4 +19,4 @@ def run() -> None:
              (lat or 0) * 1e3, f"{fpga} {gops}GOp/s")
     emit("table4/this-work", rep.total_s * 1e6,
          f"Arria10 {rep.total_s * 1e3:.0f}ms {rep.gops:.1f}GOp/s "
-         f"(paper: 205ms, 151.7GOp/s)")
+         "(paper: 205ms, 151.7GOp/s)")

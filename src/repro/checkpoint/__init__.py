@@ -23,7 +23,6 @@ format already carries what that needs).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

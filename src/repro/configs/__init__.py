@@ -5,8 +5,6 @@ returns the reduced same-family config used by the CPU smoke tests.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
-
 from .base import ModelConfig, ShapeConfig, ALL_SHAPES  # noqa: F401
 from . import (qwen2_1_5b, qwen3_4b, qwen2_5_32b, h2o_danube3_4b,
                granite_moe_1b, llama4_scout, qwen2_vl_2b, mamba2_2_7b,

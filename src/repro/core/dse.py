@@ -26,12 +26,13 @@ import json
 import os
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import telemetry as tele
 from .resources import ResourceReport
+from .verify import VerificationError
 
 BETA = 0.01     # reward scale (percent -> [0, 1]), §4.4
 GAMMA = 0.1     # discount factor, §4.4
@@ -184,7 +185,7 @@ class RobustEvaluator(DesignSpace):
         self.quarantined: Dict[str, str] = {}
         self.stats = {"evaluated": 0, "journal_hits": 0, "retries": 0,
                       "errors": 0, "timeouts": 0, "quarantined": 0,
-                      "journal_dropped": 0}
+                      "verifier_rejects": 0, "journal_dropped": 0}
         if journal_path and os.path.exists(journal_path):
             self._load_journal()
 
@@ -265,6 +266,12 @@ class RobustEvaluator(DesignSpace):
                 self._count("timeouts")
                 last = e
                 break  # hangs are not retried — see class docstring
+            except VerificationError as e:
+                # static DRC failure: deterministic, retrying re-proves
+                # the same theorem — quarantine immediately
+                self._count("verifier_rejects")
+                last = e
+                break
             except Exception as e:
                 self._count("errors")
                 last = e

@@ -208,7 +208,7 @@ class GuardedExecutor:
         # telemetry (DESIGN.md §12): rung spans + outcome counters go
         # to the process-default sinks unless the deployment passes its
         # own (e.g. the serve loop sharing one registry per replica)
-        self._registry = registry if registry is not None \
+        self._registry = registry if registry is not None\
             else tele.get_registry()
         self._tracer = tracer if tracer is not None else tele.get_tracer()
         self._kw = dict(n_i=n_i, n_l=n_l, block_h=block_h,
@@ -223,6 +223,14 @@ class GuardedExecutor:
             self._boundaries = R.plan_checkpoints(gate.parsed, checkpoints)
         else:
             self._boundaries = tuple(sorted({int(c) for c in checkpoints}))
+        # prove the boundaries before any executor is built: deploying a
+        # guard whose recovery snapshots sit at illegal boundaries would
+        # only surface at the first escalation, mid-incident
+        from . import verify as verify_mod
+        bad = verify_mod.check_checkpoint_boundaries(gate.parsed,
+                                                     self._boundaries)
+        if bad:
+            raise verify_mod.VerificationError(bad)
         # selective hardening: audit only the policy's stage subset
         # (translated to output-tensor names, the executor's audit key)
         if self.policy.audit_stages is None:
@@ -231,7 +239,7 @@ class GuardedExecutor:
             sel = set(self.policy.audit_stages)
             unknown = sel - set(self._stage_idx)
             if unknown:
-                raise ValueError(f"audit_stages name unknown stages: "
+                raise ValueError("audit_stages name unknown stages: "
                                  f"{sorted(unknown)}")
             self._audit = tuple(ql.info.output for ql in golden.layers
                                 if ql.info.name in sel)
@@ -324,7 +332,7 @@ class GuardedExecutor:
                 reasons.append(f"saturation {sat:.4f} > {e_sat:.4f}")
             if mx > e_max * (1.0 + pol.margin):
                 reasons.append(f"max_abs {mx:.4g} > {e_max:.4g}")
-            if mean > e_mean * (1.0 + pol.margin) or \
+            if mean > e_mean * (1.0 + pol.margin) or\
                     mean * (1.0 + pol.margin) < e_mean:
                 reasons.append(f"mean_abs {mean:.4g} vs {e_mean:.4g}")
             audits.append(StageAudit(ql.info.name, t, sat, mx, mean,

@@ -24,7 +24,7 @@ divisibility constraints to branch and depthwise layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -314,7 +314,9 @@ def parse(graph: Graph, fuse_skip: bool = True,
         layers.append(li)
 
     if not layers:
-        raise ValueError(f"graph {graph.name!r} contains no compute layers")
+        raise GraphValidationError(
+            f"graph {graph.name!r} contains no compute layers",
+            node=graph.name)
 
     if fuse_skip:
         layers = _fold_skip_adds(layers, canon(graph.outputs[0]))
@@ -379,10 +381,9 @@ def raise_if_unfused(graph: Graph, node: Node, layers: List[LayerInfo]) -> None:
         if node.outputs[0] in (li.output,):
             return
     # Softmax on the classifier output is recognised as fused elsewhere.
-    raise ValueError(
-        f"standalone {node.op_type} node {node.name!r} cannot be mapped to "
-        "the pipelined kernel library"
-    )
+    raise GraphValidationError(
+        f"standalone {node.op_type} node cannot be mapped to the "
+        "pipelined kernel library", node=node.name)
 
 
 def _conv_layer(graph: Graph, node: Node) -> LayerInfo:

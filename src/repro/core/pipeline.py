@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.kernels import ops
 from . import parser as P
+from . import verify as V
 from .quantize import INT8_MAX, INT8_MIN, QuantSpec, quantize_weights
 
 
@@ -138,7 +139,7 @@ def thread_scales(model: P.ParsedModel,
             break
     for t in (model.input_name, model.output_name):
         if t not in tensor_m:
-            raise ValueError(f"could not resolve fixed-point position of "
+            raise ValueError("could not resolve fixed-point position of "
                              f"tensor {t!r} from the given specs")
     return tensor_m
 
@@ -177,7 +178,8 @@ def _check_group(li: P.LayerInfo) -> None:
 
 def build_quantized(model: P.ParsedModel,
                     specs: Dict[str, QuantSpec],
-                    per_channel: Optional[bool] = None) -> QuantizedModel:
+                    per_channel: Optional[bool] = None,
+                    verify: bool = True) -> QuantizedModel:
     """Apply the user-given (N, m) pairs (the paper: CNN2Gate does not
     *perform* quantization, it *applies* provided values) and stage all
     weights into the kernel-native layouts.  Merge stages (add/concat)
@@ -194,7 +196,15 @@ def build_quantized(model: P.ParsedModel,
         identical numerics, shift-vector datapath);
       * ``False`` — strict per-tensor: a tuple ``m_w`` raises.
     Activations are per-tensor in every mode, so merge alignment and
-    fused-skip epilogues are untouched beyond the conv requant."""
+    fused-skip epilogues are untouched beyond the conv requant.
+
+    ``verify`` (default on) runs the static design-rule checks of
+    :mod:`repro.core.verify` over the program — the cheap structural
+    rules before staging, the overflow bounds on the staged int8 arrays
+    after — and raises :class:`~repro.core.verify.VerificationError`
+    (a ``ValueError``) on any error-severity diagnostic.  Verification
+    is pure analysis: the staged program and the executor jaxpr are
+    byte-identical with it on or off."""
     if per_channel is not None:
         coerced = {}
         for name, spec in specs.items():
@@ -204,19 +214,30 @@ def build_quantized(model: P.ParsedModel,
             weighted = (li is not None and li.name == name
                         and li.kind in (P.CONV, P.FC))
             if not per_channel and spec.per_channel:
-                raise ValueError(
-                    f"spec for {name!r} is per-channel but "
-                    "per_channel=False was requested")
+                raise V.VerificationError([V.Diagnostic(
+                    "QV206", V.ERROR, stage=name,
+                    detail=f"spec for {name!r} is per-channel but "
+                           "per_channel=False was requested")])
             if per_channel and weighted and not spec.per_channel:
                 coerced[name] = dataclasses.replace(
                     spec, m_w=(spec.m_w,) * li.c_out)
         specs = dict(specs, **coerced)
+    if verify:
+        # cheap structural rules first — spec shapes, shift ranges,
+        # threading conflicts, merge alignment — so an infeasible spec
+        # set fails with structured diagnostics before any staging work
+        pre = V.check_spec_shapes(model, specs)
+        pre += V.check_requant_shifts(model, specs)
+        tm_chk, d_thr = V.thread_scales_checked(model, specs)
+        pre += d_thr
+        pre += V.check_merge_alignment(model, specs, tm_chk)
+        V.VerificationReport(pre).raise_if_errors()
     tensor_m = thread_scales(model, specs)
     layers: List[QuantizedLayer] = []
     for li in model.layers:
         # pool stages carry no weights: int8 passes through at the
         # incoming fixed-point scale (no spec, no requant)
-        spec = specs.get(li.name) if li.kind in (P.POOL, P.ADD, P.CONCAT) \
+        spec = specs.get(li.name) if li.kind in (P.POOL, P.ADD, P.CONCAT)\
             else specs[li.name]
         w = model.graph.initializers[li.weight] if li.weight else None
         b = model.graph.initializers[li.bias] if li.bias else None
@@ -236,11 +257,13 @@ def build_quantized(model: P.ParsedModel,
                 merge_spec = QuantSpec(m_w=0, m_x=m_common, m_y=m_common)
             operand_shifts = tuple(m - merge_spec.m_x for m in m_ops)
             if any(s < 0 for s in operand_shifts):
-                raise ValueError(
-                    f"fused merge {li.merge.name!r}: operand position "
-                    f"below the common scale m={merge_spec.m_x} (shifts "
-                    f"{operand_shifts}) — shift-only alignment cannot "
-                    "scale up")
+                raise V.VerificationError([V.Diagnostic(
+                    "QV202", V.ERROR, stage=li.name,
+                    tensor=li.output,
+                    detail=f"fused merge {li.merge.name!r}: operand "
+                           "position below the common scale "
+                           f"m={merge_spec.m_x} (shifts {operand_shifts})"
+                           " — shift-only alignment cannot scale up")])
         if li.kind in (P.ADD, P.CONCAT):
             m_ops = [tensor_m[t] for t in li.inputs]
             if spec is None:
@@ -248,10 +271,12 @@ def build_quantized(model: P.ParsedModel,
                 spec = QuantSpec(m_w=0, m_x=m_common, m_y=m_common)
             operand_shifts = tuple(m - spec.m_x for m in m_ops)
             if any(s < 0 for s in operand_shifts):
-                raise ValueError(
-                    f"merge {li.name!r}: operand position below the "
-                    f"common scale m={spec.m_x} (shifts {operand_shifts})"
-                    " — shift-only alignment cannot scale up")
+                raise V.VerificationError([V.Diagnostic(
+                    "QV202", V.ERROR, stage=li.name, tensor=li.output,
+                    detail=f"merge {li.name!r}: operand position below "
+                           f"the common scale m={spec.m_x} (shifts "
+                           f"{operand_shifts}) — shift-only alignment "
+                           "cannot scale up")])
         if w is not None:
             w_q, b_q = quantize_weights(w, b, spec)
             prev_info = model.stage_producing(li.inputs[0])
@@ -259,6 +284,15 @@ def build_quantized(model: P.ParsedModel,
             b_q = jnp.asarray(b_q) if b_q is not None else None
         layers.append(QuantizedLayer(li, spec, w_q, b_q, operand_shifts,
                                      merge_spec))
+    if verify:
+        # the deep rules run on the staged program: overflow bounds on
+        # the actual int8 arrays (no re-quantization), alias/liveness of
+        # the schedule, fused/unfused threading identity
+        post = V.check_accumulators(model, specs, quantized_layers=layers)
+        post += V.check_concat_partition(model)
+        post += V.check_liveness(model)
+        post += V.check_threading_identity(model, specs)
+        V.VerificationReport(post).raise_if_errors()
     return QuantizedModel(
         name=model.name,
         layers=layers,
@@ -455,37 +489,25 @@ def make_executor(qm: QuantizedModel, n_i: int = 16, n_l: int = 32,
     weighted_names = {ql.info.name for ql in stages if ql.w_q is not None}
     unknown_w = weight_arg_set - weighted_names
     if unknown_w:
-        raise ValueError(f"weight_args name stages without staged "
+        raise ValueError("weight_args name stages without staged "
                          f"weights: {sorted(unknown_w)}")
     fault_arg_set = frozenset(fault_args or ())
     known_tensors = {ql.info.output for ql in stages} | {in_name}
     unknown_f = fault_arg_set - known_tensors
     if unknown_f:
-        raise ValueError(f"fault_args name unknown tensors: "
+        raise ValueError("fault_args name unknown tensors: "
                          f"{sorted(unknown_f)}")
 
     ckpt_idx = tuple(sorted({int(c) for c in (checkpoints or ())}))
     if ckpt_idx and replay_from is not None:
         raise ValueError("checkpoints and replay_from are exclusive: a "
                          "replay closure never snapshots")
-    for c in ckpt_idx:
-        if not 0 <= c < len(stages):
-            raise ValueError(f"checkpoint boundary {c} outside the "
-                             f"schedule [0, {len(stages)})")
-    # a boundary with a fused-concat merge buffer under construction is
-    # not a stage boundary (the buffer is not a named graph tensor)
-    name_idx = {ql.info.name: i for i, ql in enumerate(stages)}
-    for i, ql in enumerate(stages):
-        cc = ql.info.concat
-        if cc is None:
-            continue
-        c_end = name_idx[cc.name]
-        for c in ckpt_idx:
-            if i <= c < c_end:
-                raise ValueError(
-                    f"checkpoint boundary {c} lies inside fused-concat "
-                    f"group {cc.name!r} (stages {i}..{c_end}); pick a "
-                    "boundary where only named tensors are live")
+    # boundary legality (range + never inside a fused-concat group) is
+    # the verifier's QV304 rule — one shared implementation with the
+    # checkpoint planner, so executor and planner can never disagree
+    bad = V.check_checkpoint_boundaries(qm.parsed, ckpt_idx)
+    if bad:
+        raise V.VerificationError(bad)
     if replay_from is not None and not -1 <= replay_from < len(stages):
         raise ValueError(f"replay_from={replay_from} outside [-1, "
                          f"{len(stages)})")
@@ -797,7 +819,7 @@ def layer_bytes(li: P.LayerInfo) -> Tuple[int, int, int]:
         in_b += int(np.prod(li.conv_out_shape))
     w_b = li.weight_count()
     out_b = int(np.prod(li.out_shape))
-    if li.kind == P.CONV and li.concat is not None \
+    if li.kind == P.CONV and li.concat is not None\
             and li.concat.pool is not None:
         # concat producer with the merge's absorbed pool: the slice it
         # writes is in pooled geometry

@@ -69,18 +69,28 @@ class QuantSpec:
     def requant_shift(self) -> Union[int, Tuple[int, ...]]:
         """int32 accumulator (scale 2^-(m_w+m_x)) -> int8 out (scale
         2^-m_y).  A per-channel spec yields a per-lane shift vector."""
+        shifts = shift_lanes(self)
         if self.per_channel:
-            shifts = tuple(mw + self.m_x - self.m_y for mw in self.m_w)
             if any(s < 0 for s in shifts):
                 raise ValueError(f"negative per-lane requant shift for {self}")
             if any(s > MAX_SHIFT for s in shifts):
                 raise ValueError(
                     f"per-lane requant shift exceeds {MAX_SHIFT} for {self}")
             return shifts
-        s = self.m_w + self.m_x - self.m_y
+        (s,) = shifts
         if s < 0:
             raise ValueError(f"negative requant shift for {self}")
         return s
+
+
+def shift_lanes(spec: "QuantSpec") -> Tuple[int, ...]:
+    """Per-lane requant shifts of a spec with NO range enforcement —
+    the static verifier's view (it *reports* out-of-range shifts as
+    diagnostics instead of raising mid-analysis).  Always a tuple; a
+    per-tensor spec yields one lane."""
+    if spec.per_channel:
+        return tuple(mw + spec.m_x - spec.m_y for mw in spec.m_w)
+    return (spec.m_w + spec.m_x - spec.m_y,)
 
 
 @dataclasses.dataclass

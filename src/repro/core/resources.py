@@ -257,19 +257,35 @@ def checkpoint_live_bytes(parsed, boundary: int) -> Dict[str, int]:
             if p <= boundary < last_use.get(t, -1)}
 
 
+def concat_group_spans(parsed) -> Tuple[Tuple[int, int, str], ...]:
+    """``(start, end, merge_name)`` spans of stage indices where a
+    fused-concat merge buffer is under construction: from each group's
+    first producer up to (excluding) its Concat stage.  Boundaries in a
+    span are invalid snapshot points — the half-built shared buffer is
+    live but is not a named graph tensor.  Shared by
+    :func:`eligible_checkpoints` and ``verify.check_checkpoint_boundaries``
+    so the planner and the verifier can never disagree."""
+    layers = parsed.layers
+    name_idx = {li.name: i for i, li in enumerate(layers)}
+    first: Dict[str, int] = {}
+    for i, li in enumerate(layers):
+        if li.concat is not None and li.concat.name in name_idx:
+            first.setdefault(li.concat.name, i)
+    return tuple(sorted((start, name_idx[name], name)
+                        for name, start in first.items()))
+
+
 def eligible_checkpoints(parsed) -> Tuple[int, ...]:
     """Stage indices that are valid snapshot boundaries: everything
     except the final stage (snapshotting after the output is produced
     recovers nothing) and boundaries inside a fused-concat group, where
     the half-built shared merge buffer is live but is not a named graph
     tensor (the executor rejects those too)."""
-    layers = parsed.layers
-    name_idx = {li.name: i for i, li in enumerate(layers)}
     blocked = set()
-    for i, li in enumerate(layers):
-        if li.concat is not None:
-            blocked.update(range(i, name_idx[li.concat.name]))
-    return tuple(i for i in range(len(layers) - 1) if i not in blocked)
+    for start, end, _name in concat_group_spans(parsed):
+        blocked.update(range(start, end))
+    return tuple(i for i in range(len(parsed.layers) - 1)
+                 if i not in blocked)
 
 
 def checkpoint_bytes(parsed, boundaries) -> int:

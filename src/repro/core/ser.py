@@ -503,7 +503,7 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
         n_silent = sum(c.counts()["silent"] for c in campaigns)
         if n_silent:
             raise SystemExit(f"[ser] FAIL: {n_silent} silent "
-                             f"corruption(s) escaped the audit")
+                             "corruption(s) escaped the audit")
         print("[ser] silent == 0 across all campaigns")
     return doc
 

@@ -58,15 +58,32 @@ class CNNDesignSpace(DesignSpace):
     snapshots push the memory over quota is rejected exactly like an
     oversized band.  K=0 (no checkpoints, no charge) should normally be
     in the candidate list so resilience is paid for only when it fits.
+
+    ``specs`` (optional) arms the static verifier as a DRC gate: the
+    (program, specs) pair is checked once at construction, and a space
+    whose program fails verification scores every option as infeasible
+    (all quotas at ``FAILED_PCT``, ``raw["verifier"]`` naming the
+    tripped rules) — the Algorithm-1 move of rejecting a design before
+    paying the vendor compiler for it.
     """
 
     def __init__(self, model: ParsedModel, board: FPGAProfile,
                  ni_cap: int = NI_CAP, nl_cap: int = NL_CAP,
                  block_h_options: Optional[List[int]] = None,
                  per_channel: bool = False,
-                 checkpoint_options: Optional[List[int]] = None):
+                 checkpoint_options: Optional[List[int]] = None,
+                 specs: Optional[Dict] = None):
         self.model = model
         self.board = board
+        #: error rule ids from the one-time static verification of the
+        #: (program, specs) pair; empty when clean or unarmed
+        self.verifier_errors: Tuple[str, ...] = ()
+        if specs is not None:
+            from . import verify as verify_mod
+            rep = verify_mod.verify_program(model, specs,
+                                            check_identity=False)
+            self.verifier_errors = tuple(sorted(
+                {d.rule_id for d in rep.errors}))
         self._ni = [n for n in model.feasible_ni(ni_cap) if n <= ni_cap]
         self._nl = [n for n in model.feasible_nl(nl_cap) if n <= nl_cap]
         self._bh = sorted(block_h_options) if block_h_options else None
@@ -113,6 +130,14 @@ class CNNDesignSpace(DesignSpace):
         return self._ck_cache[k]
 
     def evaluate(self, option: Tuple) -> ResourceReport:
+        if self.verifier_errors:
+            # a program that fails DRC can never fit, at any option:
+            # charge it like any over-quota design (Algorithm 1)
+            from .dse import FAILED_PCT
+            return ResourceReport(
+                percents={k: FAILED_PCT
+                          for k in ("lut", "dsp", "mem", "reg")},
+                raw={"verifier": list(self.verifier_errors)}, fits=False)
         ni, nl = option[0], option[1]
         rep = estimate_fpga(self.board, ni, nl, self.weight_bytes)
         if self._bh is None and self._ck is None:
@@ -207,7 +232,6 @@ class ShardingSpace(DesignSpace):
     def evaluate(self, option: Tuple) -> ResourceReport:
         from repro.launch.dryrun import lower_cell, _depth_cfg
         from repro.sharding import PolicyOptions
-        import dataclasses
         opts = PolicyOptions(**self._policy_kwargs(option))
         cfg1, _ = _depth_cfg(self._cfg, 1)  # family-consistent reduction
         depth_over = {"n_layers": cfg1.n_layers * self.eval_depth}

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ from . import pipeline as pipe
 from .graph import Graph
 from .quantize import (MAX_SHIFT, QuantSpec, best_pow2_exponent,
                        best_pow2_exponents_per_channel)
-from .resources import (FPGA_BOARDS, FPGAProfile, fpga_layer_time_s)
+from .resources import (FPGA_BOARDS, fpga_layer_time_s)
 from .spaces import CNNDesignSpace
 
 
@@ -241,12 +241,29 @@ class CNN2Gate:
         return bool(self.specs) and any(
             s.per_channel for s in self.specs.values())
 
+    def verify(self, **kw):
+        """Run the static design-rule checks (:mod:`repro.core.verify`)
+        over the current program and return the
+        :class:`~repro.core.verify.VerificationReport`.  With a built
+        program the staged int8 arrays feed the overflow bounds; with
+        only specs applied the verifier re-quantizes from the graph
+        initializers.  Keyword args forward to ``verify_program``
+        (``vmem_budget=``, ``checkpoints=``, ...)."""
+        from . import verify as verify_mod
+        if self.quantized is not None:
+            return verify_mod.verify_quantized(self.quantized, **kw)
+        if self.specs is None:
+            raise RuntimeError("apply_quantization() or "
+                               "calibrate_quantization() first")
+        return verify_mod.verify_program(self.parsed, self.specs, **kw)
+
     def design_space(self, board: str,
                      block_h_options: Optional[List[int]] = None
                      ) -> CNNDesignSpace:
         return CNNDesignSpace(self.parsed, FPGA_BOARDS[board],
                               block_h_options=block_h_options,
-                              per_channel=self.per_channel)
+                              per_channel=self.per_channel,
+                              specs=self.specs)
 
     def explore(self, board: str, algo: str = "rl",
                 thresholds: Optional[Dict[str, float]] = None,

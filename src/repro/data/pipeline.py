@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

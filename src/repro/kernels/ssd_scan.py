@@ -14,7 +14,7 @@ Validated in interpret mode against ``ref.ssd_ref``.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

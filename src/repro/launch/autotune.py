@@ -103,13 +103,13 @@ def main() -> int:
             bh = ([int(v) for v in args.block_h.split(",")] if args.block_h
                   else list(DEFAULT_BLOCK_H_OPTIONS))
         except ValueError:
-            ap.error(f"--block-h must be comma-separated ints, "
+            ap.error("--block-h must be comma-separated ints, "
                      f"got {args.block_h!r}")
         try:
             ck = ([int(v) for v in args.checkpoint_k.split(",")]
                   if args.checkpoint_k else None)
         except ValueError:
-            ap.error(f"--checkpoint-k must be comma-separated ints, "
+            ap.error("--checkpoint-k must be comma-separated ints, "
                      f"got {args.checkpoint_k!r}")
         space = CNNDesignSpace(parse(graph), FPGA_BOARDS[args.board],
                                block_h_options=bh,
@@ -129,7 +129,7 @@ def main() -> int:
     thresholds["lut"] = args.lut_threshold
     thresholds["mem"] = max(thresholds["mem"], args.lut_threshold)
     print(f"option space: {len(space.options())} options "
-          f"x one compiler call each")
+          "x one compiler call each")
     if args.algo == "bf":
         res = dse.brute_force(space, thresholds=thresholds)
     else:

@@ -26,7 +26,6 @@ from __future__ import annotations
 import inspect
 
 import jax
-import numpy as np
 
 try:  # jax >= 0.5 explicit-sharding API; absent on older runtimes
     from jax.sharding import AxisType

@@ -306,7 +306,7 @@ def main(argv=None) -> int:
     tps = stats["tokens_per_s"]
     print(f"latency: p50={_ms(lat['p50'])} p95={_ms(lat['p95'])} "
           f"p99={_ms(lat['p99'])} over {lat['count']} requests; "
-          f"telemetry tokens/s="
+          "telemetry tokens/s="
           f"{f'{tps:.1f}' if tps is not None else 'n/a'}")
     if server.rejected or server.expired:
         print(f"admission: rejected={stats['rejected']} "

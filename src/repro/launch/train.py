@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -29,8 +28,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import configs
-from repro.configs.base import ShapeConfig
-from repro.data.pipeline import DataConfig, Prefetcher, make_source
+from repro.data.pipeline import DataConfig, make_source
 from repro.distributed import (StragglerMonitor, ef_compress,
                                init_error_feedback)
 from repro.launch import mesh as mesh_mod
@@ -87,7 +85,6 @@ def main(argv=None) -> int:
 
     with mesh_mod.set_mesh(mesh):
         state = init_train_state(model, jax.random.key(args.seed), opt_cfg)
-        pspecs = policy.param_specs(state["params"])
         step_fn = make_train_step(model, opt_cfg)
 
         if args.grad_compression == "int8_ef":
@@ -121,7 +118,6 @@ def main(argv=None) -> int:
         jit_step = jax.jit(step_fn, donate_argnums=(0,))
         monitor = StragglerMonitor()
         metrics_log = []
-        last_state_host = None
 
         if checkpointer is not None:
             checkpointer.install_preemption_hook(

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, Node, TensorInfo
-from repro.core import onnx_lite
 
 
 class GraphBuilder:

@@ -6,7 +6,6 @@ essential to keep HLO size O(1) in depth for the 64-layer dry-runs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

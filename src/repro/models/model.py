@@ -14,7 +14,6 @@ stubs included) — the dry-run lowers against these with no allocation.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -12,8 +12,7 @@ scalar fast path or per-sequence vmap path for continuous batching).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ launcher and the dry-run.  Optimizer state shards like the params
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

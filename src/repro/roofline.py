@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -128,7 +128,6 @@ def essential_bytes(hlo_text: str,
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
     by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
         dtype, dims, kind = m.group(1), m.group(2), m.group(3)
         # async pairs (-start/-done) would double count; the regex strips

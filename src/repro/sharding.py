@@ -19,7 +19,7 @@ divisibility constraints the paper applies to (N_i, N_l):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

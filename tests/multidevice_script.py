@@ -89,7 +89,6 @@ def check_sharded_train_matches_single():
 
 
 def check_compressed_psum_distinct_shards():
-    from repro.distributed import compressed_psum
     mesh = make_compat_mesh((8,), ("data",))
     rng = np.random.default_rng(2)
     # shard along axis 0: each shard sees a distinct slice
@@ -99,7 +98,6 @@ def check_compressed_psum_distinct_shards():
     def local_mean(v):
         return jax.lax.psum(v, "data") / 8.0
 
-    import jax as _jax
     spec_in = P("data", None)
     want = np.broadcast_to(np.asarray(x).mean(0, keepdims=True), (1, 64))
 

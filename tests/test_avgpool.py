@@ -1,7 +1,6 @@
 """Standalone average-pool stages: parser, kernels, end-to-end int8."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import parser

@@ -1,6 +1,5 @@
 """Checkpointing: roundtrip, atomicity, resume, elastic reshard, GC."""
 import os
-import threading
 
 import numpy as np
 import jax

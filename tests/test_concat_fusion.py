@@ -33,6 +33,7 @@ from hypothesis import strategies as st
 
 from repro.core import parser as P
 from repro.core import pipeline as pipe
+from repro.core import verify as V
 from repro.core.graph import Graph, Node
 from repro.core.resources import conv_band_working_set
 from repro.core.synthesis import CNN2Gate
@@ -473,24 +474,8 @@ def test_specs_byte_identical_fused_vs_unfused():
 
 
 # -------------------------------------- jaxpr: no standalone concat op
-
-def _concat_eqns(jaxpr) -> int:
-    """`concatenate` eqns reaching XLA outside pallas_call — a
-    standalone Concat stage would show up here; the fused program must
-    have none (mirrors test_skip_fusion's int-add probe)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "concatenate":
-            n += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            if isinstance(v, jax.core.ClosedJaxpr):
-                n += _concat_eqns(v.jaxpr)
-            elif isinstance(v, jax.core.Jaxpr):
-                n += _concat_eqns(v)
-    return n
-
+# (the probe is the verifier's reusable concat_eqns — one walker for
+# this file, test_skip_fusion, and the QV502 CLI probe)
 
 def test_fused_program_has_no_standalone_concat():
     g = cnn.squeezenet_tiny(batch=1)
@@ -499,12 +484,14 @@ def test_fused_program_has_no_standalone_concat():
     gate = CNN2Gate.from_graph(g)
     gate.calibrate_quantization(x)
     ex_f = pipe.make_executor(gate.quantized, interpret=True)
-    assert _concat_eqns(jax.make_jaxpr(ex_f)(jnp.asarray(x)).jaxpr) == 0
+    assert V.concat_eqns(jax.make_jaxpr(ex_f)(jnp.asarray(x)).jaxpr) == 0
+    # ...and the QV502 probe agrees wholesale
+    assert V.structural_probes(gate.quantized) == []
     # ...and the unfused program DOES concatenate (the probe is valid)
     gate_u = CNN2Gate.from_graph(g, fuse_concat=False)
     gate_u.apply_quantization(gate.specs)
     ex_u = pipe.make_executor(gate_u.quantized, interpret=True)
-    assert _concat_eqns(jax.make_jaxpr(ex_u)(jnp.asarray(x)).jaxpr) > 0
+    assert V.concat_eqns(jax.make_jaxpr(ex_u)(jnp.asarray(x)).jaxpr) > 0
 
 
 # ------------------------------------------------- working-set model

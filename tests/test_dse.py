@@ -1,5 +1,4 @@
 """DSE invariants + reproduction of the paper's Table-2 decisions."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -1,12 +1,12 @@
 """Fault-injection layer: plan determinism, golden-image non-mutation,
 and the jaxpr-identity guarantee of the executor's fault hooks."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import faults as F
 from repro.core import pipeline as pipe
+from repro.core import verify as V
 from repro.core.synthesis import CNN2Gate
 from repro.models import cnn
 
@@ -90,12 +90,11 @@ def test_fault_hooks_off_keep_jaxpr_identical(gate):
     trace-time-only."""
     g, x = gate
     qm = g.quantized
-    xj = jnp.asarray(x)
-    base = str(jax.make_jaxpr(
-        lambda v: pipe.make_executor(qm, interpret=True)(v))(xj))
-    off = str(jax.make_jaxpr(
-        lambda v: pipe.make_executor(qm, interpret=True, audit=False,
-                                     faults=None)(v))(xj))
-    empty = str(jax.make_jaxpr(
-        lambda v: pipe.make_executor(qm, interpret=True, faults={})(v))(xj))
+    batch = x.shape[0]
+    # the verifier's executor_jaxpr traces the same interpret-mode
+    # program the probes analyze — one tracer for every identity test
+    base = V.executor_jaxpr(qm, batch=batch, as_text=True)
+    off = V.executor_jaxpr(qm, batch=batch, as_text=True,
+                           audit=False, faults=None)
+    empty = V.executor_jaxpr(qm, batch=batch, as_text=True, faults={})
     assert base == off == empty

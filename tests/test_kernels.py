@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,6 +1,5 @@
 """Integration tests: the training and serving drivers end-to-end."""
 import json
-import os
 
 import numpy as np
 import pytest

@@ -22,6 +22,7 @@ import pytest
 
 from repro.core import pipeline as pipe
 from repro.core import quantize as Q
+from repro.core import verify as V
 from repro.core.synthesis import CNN2Gate
 from repro.kernels import ops, ref
 from repro.models import cnn
@@ -222,7 +223,6 @@ def test_per_channel_end_to_end_bit_exact_vs_stagewise_oracle(build):
     rng = np.random.default_rng(3)
     x = (rng.standard_normal((2, 3, 32, 32)) * 0.5).astype(np.float32)
     gate = _calibrated(build, x, per_channel=True)
-    qm = gate.quantized
     xj = jnp.asarray(x)
     got = np.asarray(gate.build("emulation")(xj))
 
@@ -295,21 +295,10 @@ def test_per_tensor_outputs_byte_identical_and_no_shift_operand():
     np.testing.assert_array_equal(y_default, y_strict)
 
     def pallas_arities(qm):
-        ex = pipe.make_executor(qm, interpret=True)
-        jaxpr = jax.make_jaxpr(ex)(xj)
-        arities = []
-
-        def walk(jx):
-            for eqn in jx.eqns:
-                if eqn.primitive.name == "pallas_call":
-                    arities.append(len(eqn.invars))
-                for sub in eqn.params.values():
-                    if hasattr(sub, "jaxpr"):
-                        walk(sub.jaxpr)
-                    elif hasattr(sub, "eqns"):
-                        walk(sub)
-        walk(jaxpr.jaxpr)
-        return arities
+        # the verifier's reusable probe (one walker shared with the
+        # fusion tests' eqn counts and the QV5xx CLI probes)
+        return V.pallas_call_arities(
+            V.executor_jaxpr(qm, batch=xj.shape[0]))
 
     scalar_arities = pallas_arities(gate.quantized)
     gate_pc = _calibrated(cnn.resnet_tiny, x, per_channel=True)

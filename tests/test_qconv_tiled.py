@@ -14,7 +14,6 @@ import pytest
 from repro.core import dse
 from repro.core import pipeline as pipe
 from repro.core.parser import parse
-from repro.core.quantize import QuantSpec
 from repro.core.resources import (FPGA_BOARDS, VMEM_BUDGET_BYTES,
                                   conv_band_working_set)
 from repro.core.spaces import CNNDesignSpace
@@ -173,7 +172,7 @@ def test_fc_weight_staging_nhwc_flatten_order():
     permuted at build time to NHWC-flatten order."""
     gate = CNN2Gate.from_graph(cnn.tiny_cnn(batch=1))
     x = (RNG.standard_normal((1, 3, 32, 32)) * 0.5).astype(np.float32)
-    specs = gate.calibrate_quantization(x)
+    gate.calibrate_quantization(x)
     fc = next(ql for ql in gate.quantized.layers if ql.info.kind == "fc")
     w_raw = gate.parsed.graph.initializers[fc.info.weight]
     from repro.core.quantize import quantize_weights

@@ -10,7 +10,7 @@ from repro.launch.mesh import make_compat_mesh, set_mesh
 from repro.models.model import Model
 from repro.models import layers as L
 from repro.sharding import PolicyOptions, ShardingPolicy
-from repro.configs.base import DECODE_32K, TRAIN_4K
+from repro.configs.base import DECODE_32K
 
 
 def small_mesh(data=2, model=2):

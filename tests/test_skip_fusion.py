@@ -23,6 +23,7 @@ import pytest
 
 from repro.core import parser as P
 from repro.core import pipeline as pipe
+from repro.core import verify as V
 from repro.core.quantize import QuantSpec
 from repro.core.resources import conv_band_working_set
 from repro.core.synthesis import CNN2Gate
@@ -350,28 +351,8 @@ def test_fused_merge_below_common_scale_rejected():
 
 
 # ----------------------------------------------- jaxpr: no add stage
-def _int_add_eqns(jaxpr) -> int:
-    """Integer tensor `add` eqns reaching XLA outside pallas_call — a
-    standalone merge stage would show up here (its int32 operand add);
-    the fused program must have none."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "add":
-            avals = [v.aval for v in eqn.invars
-                     if hasattr(v, "aval") and hasattr(v.aval, "dtype")]
-            if avals and all(np.issubdtype(a.dtype, np.integer)
-                             and getattr(a, "ndim", 0) >= 4
-                             for a in avals):
-                n += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            if isinstance(v, jax.core.ClosedJaxpr):
-                n += _int_add_eqns(v.jaxpr)
-            elif isinstance(v, jax.core.Jaxpr):
-                n += _int_add_eqns(v)
-    return n
-
+# (the probe itself is the verifier's reusable int_add_eqns — the old
+# copy-pasted walker lives in core/verify.py now)
 
 def test_fused_program_has_no_standalone_add_stage():
     gate = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
@@ -379,14 +360,16 @@ def test_fused_program_has_no_standalone_add_stage():
     gate.calibrate_quantization(x)
     ex_f = pipe.make_executor(gate.quantized, interpret=True)
     jaxpr_f = jax.make_jaxpr(lambda v: ex_f(v))(jnp.asarray(x))
-    assert _int_add_eqns(jaxpr_f.jaxpr) == 0
+    assert V.int_add_eqns(jaxpr_f.jaxpr) == 0
+    # ...and the QV501 probe agrees wholesale
+    assert V.structural_probes(gate.quantized) == []
     # ...and the unfused program DOES have them (the probe is valid)
     gate_u = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1),
                                  fuse_skip=False)
     gate_u.apply_quantization(gate.specs)
     ex_u = pipe.make_executor(gate_u.quantized, interpret=True)
     jaxpr_u = jax.make_jaxpr(lambda v: ex_u(v))(jnp.asarray(x))
-    assert _int_add_eqns(jaxpr_u.jaxpr) > 0
+    assert V.int_add_eqns(jaxpr_u.jaxpr) > 0
 
 
 # ------------------------------------------------ working-set model

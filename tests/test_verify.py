@@ -1,0 +1,414 @@
+"""qverify static analyzer (DESIGN.md §13): the adversarial matrix.
+
+Every seeded violation class must trip exactly its rule, and the
+shipped builders must verify clean — the verifier is only trustworthy
+if it is both sound on bad programs and quiet on good ones.  The last
+tests pin the acceptance property that verification never changes the
+emitted program (executor jaxpr byte-identity with verify on/off).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import parser as P
+from repro.core import pipeline as pipe
+from repro.core import verify as V
+from repro.core.quantize import QuantSpec
+from repro.core.resources import eligible_checkpoints
+from repro.core.synthesis import CNN2Gate
+from repro.models import cnn
+
+
+def _resnet_gate(per_channel=False, seed=0):
+    gate = CNN2Gate.from_graph(cnn.resnet_tiny(batch=1))
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(gate.parsed.input_shape) * 0.5
+         ).astype(np.float32)
+    gate.calibrate_quantization(x, per_channel=per_channel)
+    return gate
+
+
+def _rule_ids(diags):
+    return {d.rule_id for d in diags}
+
+
+# ------------------------------------------------------ clean programs
+
+def test_shipped_builders_verify_clean():
+    for builder in (cnn.resnet_tiny, cnn.squeezenet_tiny):
+        gate = CNN2Gate.from_graph(builder(batch=1))
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal(gate.parsed.input_shape) * 0.5
+             ).astype(np.float32)
+        gate.calibrate_quantization(x)
+        rep = gate.verify()
+        assert rep.ok and not rep.diagnostics, rep.render()
+
+
+def test_report_api():
+    d_err = V.Diagnostic("QV101", V.ERROR, stage="c1", tensor="t",
+                         detail="boom")
+    d_warn = V.Diagnostic("QV206", V.WARNING, stage="x")
+    rep = V.VerificationReport([d_err, d_warn])
+    assert not rep.ok
+    assert rep.errors == [d_err] and rep.warnings == [d_warn]
+    assert rep.by_rule("QV101") == [d_err]
+    assert rep.rule_ids == ("QV101", "QV206")
+    assert "QV101" in str(d_err) and "stage=c1" in str(d_err)
+    with pytest.raises(V.VerificationError) as ei:
+        rep.raise_if_errors()
+    assert ei.value.diagnostics == (d_err,)
+    assert isinstance(ei.value, ValueError)  # legacy guards keep working
+    # warnings alone never raise
+    assert V.VerificationReport([d_warn]).raise_if_errors().ok
+
+
+# ------------------------------------------- QV101: accumulator overflow
+
+def test_overflow_prone_spec_trips_qv101():
+    """A huge-Cin conv whose weights quantize to full-magnitude int8:
+    128 * Cin*KH*KW*|w_q| blows int32 — the verifier must prove it."""
+    cin = 16384  # 128 * (3*3*16384 taps * 115) ≈ 2.17e9 > 2^31-1
+    b = cnn.GraphBuilder("overflow", (1, cin, 4, 4))
+    b.conv(8, 3, pad=1, relu=False)
+    b.inits["conv_1_w"][:] = 0.9  # every tap quantizes hot
+    parsed = P.parse(b.build())
+    name = next(li.name for li in parsed.layers if li.kind == P.CONV)
+    specs = {name: QuantSpec(m_w=7, m_x=0, m_y=7)}  # w_q = ±115
+    rep = V.verify_program(parsed, specs)
+    assert _rule_ids(rep.errors) == {"QV101"}
+    assert "int32" in rep.errors[0].detail
+    with pytest.raises(V.VerificationError, match="QV101"):
+        pipe.build_quantized(parsed, specs)
+    # a sane spec (small m_w: weights quantize coarsely) is provable
+    ok = {name: QuantSpec(m_w=0, m_x=0, m_y=0)}
+    assert V.verify_program(parsed, ok).ok
+
+
+def test_per_channel_overflow_localized_to_lane():
+    """Only the hot lane's spec overflows; per-lane analysis must still
+    catch it (a per-tensor mean would not)."""
+    cin = 16384
+    b = cnn.GraphBuilder("pc_overflow", (1, cin, 4, 4))
+    b.conv(4, 3, pad=1, relu=False)
+    b.inits["conv_1_w"][:] = 0.9
+    parsed = P.parse(b.build())
+    name = next(li.name for li in parsed.layers if li.kind == P.CONV)
+    specs = {name: QuantSpec(m_w=(0, 0, 7, 0), m_x=0, m_y=0)}
+    rep = V.verify_program(parsed, specs)
+    assert "QV101" in _rule_ids(rep.errors)
+    assert "lane 2" in " ".join(d.detail for d in rep.by_rule("QV101"))
+
+
+# --------------------------------------- QV201/QV102: shift range rules
+
+def test_negative_requant_shift_trips_qv201():
+    gate = _resnet_gate()
+    specs = dict(gate.specs)
+    name = next(li.name for li in gate.parsed.layers
+                if li.kind == P.CONV)
+    s = specs[name]
+    specs[name] = dataclasses.replace(s, m_y=s.m_w + s.m_x + 3)
+    rep = V.verify_program(gate.parsed, specs, check_identity=False)
+    assert "QV201" in _rule_ids(rep.errors)
+    with pytest.raises(V.VerificationError, match="QV201"):
+        pipe.build_quantized(gate.parsed, specs)
+
+
+def test_oversized_shift_trips_qv102():
+    gate = _resnet_gate()
+    specs = dict(gate.specs)
+    name = next(li.name for li in gate.parsed.layers
+                if li.kind == P.CONV)
+    specs[name] = QuantSpec(m_w=40, m_x=0, m_y=0)  # shift 40 > MAX_SHIFT
+    rep = V.verify_program(gate.parsed, specs, check_identity=False)
+    assert "QV102" in _rule_ids(rep.errors)
+
+
+# ------------------------------------------ QV202: negative merge align
+
+def test_negative_merge_alignment_trips_qv202():
+    """A merge spec pinned above its operand positions cannot be
+    reached by right shifts — QV202, and build_quantized agrees (its
+    raise keeps the historical 'alignment' wording)."""
+    gate = _resnet_gate()
+    pm = gate.parsed
+    host = next(li for li in pm.layers if li.merge is not None)
+    specs = {li.name: QuantSpec(m_w=7, m_x=6, m_y=6)
+             for li in pm.layers if li.kind in (P.CONV, P.FC)}
+    specs[host.merge.name] = QuantSpec(m_w=0, m_x=8, m_y=8)
+    rep = V.verify_program(pm, specs, check_identity=False)
+    assert "QV202" in _rule_ids(rep.errors)
+    with pytest.raises(ValueError, match="alignment"):
+        pipe.build_quantized(pm, specs)
+
+
+# ------------------------------------------ QV203: threading conflicts
+
+def test_conflicting_pins_trip_qv203():
+    """Two consumers of one tensor demanding different m_x: the runtime
+    thread_scales silently keeps the first pin — the verifier calls the
+    conflict out."""
+    b = cnn.GraphBuilder("fork", (1, 4, 8, 8))
+    b.conv(4, 3, pad=1)
+    t = b.tap()                      # shared fan-out tensor
+    b.conv(4, 3, pad=1)
+    a = b.tap()
+    b.from_tap(t).conv(4, 3, pad=1)  # second consumer of t
+    b.add_from(a, relu=False)
+    parsed = P.parse(b.build(), fuse_skip=False)
+    c0, ca, cb = (li.name for li in parsed.layers if li.kind == P.CONV)
+    m = next(li.name for li in parsed.layers if li.kind == P.ADD)
+    specs = {c0: QuantSpec(m_w=4, m_x=4, m_y=4),
+             ca: QuantSpec(m_w=4, m_x=4, m_y=4),
+             cb: QuantSpec(m_w=4, m_x=5, m_y=4),  # disagrees on t
+             m: QuantSpec(m_w=0, m_x=4, m_y=4)}
+    _m, diags = V.thread_scales_checked(parsed, specs)
+    assert "QV203" in _rule_ids(diags)
+
+
+def test_missing_weighted_spec_trips_qv205():
+    gate = _resnet_gate()
+    specs = dict(gate.specs)
+    dropped = next(li.name for li in gate.parsed.layers
+                   if li.kind == P.CONV)
+    del specs[dropped]
+    rep = V.verify_program(gate.parsed, specs, check_identity=False)
+    assert "QV205" in _rule_ids(rep.errors)
+    assert any(d.stage == dropped for d in rep.by_rule("QV205"))
+
+
+# --------------------------------------------- QV206: malformed specs
+
+def test_wrong_lane_count_trips_qv206():
+    gate = _resnet_gate()
+    specs = dict(gate.specs)
+    name = next(li.name for li in gate.parsed.layers
+                if li.kind == P.CONV)
+    specs[name] = dataclasses.replace(specs[name], m_w=(4, 4, 4))
+    rep = V.verify_program(gate.parsed, specs, check_identity=False)
+    assert "QV206" in _rule_ids(rep.errors)
+
+
+def test_strict_per_tensor_conflict_trips_qv206():
+    gate = _resnet_gate(per_channel=True)
+    rep = V.verify_program(gate.parsed, gate.specs, per_channel=False,
+                           check_identity=False)
+    assert "QV206" in _rule_ids(rep.errors)
+    with pytest.raises(ValueError,
+                       match="per_channel=False was requested"):
+        pipe.build_quantized(gate.parsed, gate.specs, per_channel=False)
+
+
+# ----------------------------------------- QV301: concat partitioning
+
+def _fused_concat_model():
+    gate = CNN2Gate.from_graph(cnn.squeezenet_tiny(batch=1))
+    rng = np.random.default_rng(3)
+    x = (rng.standard_normal(gate.parsed.input_shape) * 0.5
+         ).astype(np.float32)
+    gate.calibrate_quantization(x)
+    return gate
+
+
+def _with_offset(parsed, delta):
+    """Clone the parse with the first fused producer's concat_offset
+    shifted by ``delta`` — the seeded overlapping-slices violation."""
+    layers = list(parsed.layers)
+    i, li = next((i, li) for i, li in enumerate(layers)
+                 if li.concat is not None and li.concat_offset > 0)
+    layers[i] = dataclasses.replace(li,
+                                    concat_offset=li.concat_offset + delta)
+    return dataclasses.replace(parsed, layers=layers)
+
+
+def test_overlapping_concat_offsets_trip_qv301():
+    gate = _fused_concat_model()
+    bad = _with_offset(gate.parsed, -1)  # slides onto the previous slice
+    diags = V.check_concat_partition(bad)
+    assert _rule_ids(diags) == {"QV301"}
+    assert any("overlap" in d.detail for d in diags)
+    # gaps (slide the slice the other way) are equally fatal
+    diags = V.check_concat_partition(_with_offset(gate.parsed, +1))
+    assert _rule_ids(diags) == {"QV301"}
+    # and the clean program really partitions
+    assert V.check_concat_partition(gate.parsed) == []
+
+
+# --------------------------------- QV302/QV303: liveness & slice escape
+
+def test_use_after_release_trips_qv302():
+    """A stage spliced into a committed schedule that re-reads a tensor
+    the journaled release plan already dropped: static analysis must
+    see the dangling read (the executor's environment pops buffers at
+    exactly those indices)."""
+    gate = _resnet_gate()
+    pm = gate.parsed
+    plan = V.release_schedule(pm)  # buffer lifetimes the build committed
+    layers = list(pm.layers)
+    first_conv = next(li for li in layers if li.kind == P.CONV)
+    final = layers[-1]
+    # a fake consumer of the first conv's long-released output, spliced
+    # after the (renamed) final stage
+    layers[-1] = dataclasses.replace(final, output=final.output + "_t")
+    tail = dataclasses.replace(
+        final, name="late",
+        inputs=(layers[-1].output, first_conv.output),
+        output=pm.output_name)
+    bad = dataclasses.replace(pm, layers=layers + [tail])
+    diags = V.check_liveness(bad, release_at=plan)
+    assert "QV302" in _rule_ids(diags)
+    assert any("release" in d.detail for d in diags)
+    # a self-consistent schedule re-derives its own plan and is clean
+    assert V.check_liveness(bad) == []
+
+
+def test_use_before_def_trips_qv302():
+    gate = _resnet_gate()
+    pm = gate.parsed
+    layers = list(pm.layers)
+    li = next(li for li in layers if li.kind == P.CONV)
+    i = layers.index(li)
+    layers[i] = dataclasses.replace(li, inputs=("never_made",))
+    diags = V.check_liveness(dataclasses.replace(pm, layers=layers))
+    assert "QV302" in _rule_ids(diags)
+    assert any("before any scheduled stage" in d.detail for d in diags)
+
+
+def test_fused_slice_escape_trips_qv303():
+    """A consumer reading a fused-concat producer's output directly:
+    that tensor only exists as a slice of the shared merge buffer."""
+    gate = _fused_concat_model()
+    pm = gate.parsed
+    layers = list(pm.layers)
+    prod = next(li for li in layers if li.concat is not None)
+    cc_i = next(i for i, li in enumerate(layers)
+                if li.name == prod.concat.name)
+    after = layers[cc_i + 1]
+    layers[cc_i + 1] = dataclasses.replace(
+        after, inputs=tuple(after.inputs) + (prod.output,))
+    diags = V.check_liveness(dataclasses.replace(pm, layers=layers))
+    assert "QV303" in _rule_ids(diags)
+
+
+# --------------------------------------- QV304: checkpoint boundaries
+
+def test_in_group_checkpoint_boundary_trips_qv304():
+    gate = _fused_concat_model()
+    pm = gate.parsed
+    blocked = sorted(set(range(len(pm.layers) - 1))
+                     - set(eligible_checkpoints(pm)))
+    assert blocked  # squeezenet has fused-concat groups
+    diags = V.check_checkpoint_boundaries(pm, [blocked[0]])
+    assert _rule_ids(diags) == {"QV304"}
+    assert "fused-concat" in diags[0].detail
+    # make_executor delegates to the same rule
+    with pytest.raises(ValueError, match="fused-concat"):
+        pipe.make_executor(gate.quantized, interpret=True,
+                           checkpoints=[blocked[0]])
+    # and the guard proves boundaries before building anything
+    from repro.core.guard import GuardPolicy, GuardedExecutor
+    x = np.zeros(pm.input_shape, np.float32)
+    with pytest.raises(V.VerificationError):
+        GuardedExecutor(gate, x, policy=GuardPolicy(),
+                        checkpoints=[blocked[0]])
+
+
+def test_out_of_range_boundary_trips_qv304():
+    gate = _resnet_gate()
+    diags = V.check_checkpoint_boundaries(gate.parsed, [99])
+    assert _rule_ids(diags) == {"QV304"}
+    assert "outside the schedule" in diags[0].detail
+    assert V.check_checkpoint_boundaries(
+        gate.parsed, eligible_checkpoints(gate.parsed)) == []
+
+
+# ------------------------------------------- QV401/QV402: budget rules
+
+def test_vmem_budget_rules():
+    gate = _resnet_gate()
+    # unarmed: budgets are deployment decisions, not program properties
+    assert V.check_resources(gate.parsed, vmem_budget=None) == []
+    tight = V.check_resources(gate.parsed, n_i=16, n_l=32,
+                              vmem_budget=1024)
+    assert "QV401" in _rule_ids(tight)
+    ck = eligible_checkpoints(gate.parsed)[:2]
+    armed = V.check_resources(gate.parsed, n_i=16, n_l=32,
+                              vmem_budget=10 ** 5, checkpoints=ck)
+    assert "QV402" in _rule_ids(armed)
+    roomy = V.check_resources(gate.parsed, n_i=16, n_l=32,
+                              vmem_budget=10 ** 9, checkpoints=ck)
+    assert roomy == []
+
+
+# ------------------------------------------------ DSE & CLI integration
+
+def test_design_space_charges_verifier_rejects_like_infeasible():
+    from repro.core.dse import FAILED_PCT
+    from repro.core.resources import FPGA_BOARDS
+    from repro.core.spaces import CNNDesignSpace
+
+    gate = _resnet_gate()
+    bad_specs = dict(gate.specs)
+    name = next(li.name for li in gate.parsed.layers
+                if li.kind == P.CONV)
+    s = bad_specs[name]
+    bad_specs[name] = dataclasses.replace(s, m_y=s.m_w + s.m_x + 3)
+    space = CNNDesignSpace(gate.parsed, FPGA_BOARDS["ARRIA10"],
+                           specs=bad_specs)
+    assert "QV201" in space.verifier_errors
+    rep = space.evaluate(space.options()[0])
+    assert not rep.fits and rep.percents["mem"] == FAILED_PCT
+    assert rep.raw["verifier"] == list(space.verifier_errors)
+    # clean specs evaluate normally
+    good = CNNDesignSpace(gate.parsed, FPGA_BOARDS["ARRIA10"],
+                          specs=gate.specs)
+    assert good.verifier_errors == ()
+    assert good.evaluate(good.options()[0]).percents["mem"] < 100.0
+
+
+def test_robust_evaluator_does_not_retry_verifier_rejects():
+    from repro.core import dse
+
+    class _Space(dse.DesignSpace):
+        def __init__(self):
+            self.calls = 0
+
+        def options(self):
+            return [(1, 1)]
+
+        def axes(self):
+            return [[1], [1]]
+
+        def evaluate(self, option):
+            self.calls += 1
+            raise V.VerificationError(
+                [V.Diagnostic("QV201", V.ERROR, stage="c1")])
+
+    space = _Space()
+    ev = dse.RobustEvaluator(space, retries=3, backoff_s=0.0)
+    rep = ev.evaluate((1, 1))
+    assert not rep.fits
+    assert space.calls == 1  # deterministic failure: no retries
+    assert "QV201" in next(iter(ev.quarantined.values()))
+
+
+def test_verify_cli_clean_on_zoo_model():
+    from repro.launch import verify as cli
+
+    assert cli.main(["--models", "resnet_tiny", "--per-channel", "off",
+                     "--fused", "on"]) == 0
+    with pytest.raises(SystemExit):
+        cli.main(["--models", "nope"])
+    assert cli.main(["--list-rules"]) == 0
+
+
+# ------------------------------- acceptance: verification is pure
+
+def test_executor_jaxpr_byte_identical_with_verification():
+    gate = _resnet_gate()
+    qm_v = pipe.build_quantized(gate.parsed, gate.specs, verify=True)
+    qm_n = pipe.build_quantized(gate.parsed, gate.specs, verify=False)
+    assert V.executor_jaxpr(qm_v, as_text=True) == \
+        V.executor_jaxpr(qm_n, as_text=True)
